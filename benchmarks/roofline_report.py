@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json.
+
+Usage: PYTHONPATH=src python benchmarks/roofline_report.py [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "results", "dryrun.json"))
+    args = ap.parse_args()
+    with open(args.json) as f:
+        res = json.load(f)
+
+    print("### Dry-run status (every arch x shape x mesh)\n")
+    print("| arch | shape | mesh | status | peak GB/dev | fits 16GB | "
+          "compile s |")
+    print("|---|---|---|---|---:|---|---:|")
+    for key, r in sorted(res.items()):
+        if "|" not in key:
+            continue
+        status = r.get("status")
+        if status == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skipped ({r['reason'].split(':')[0]}) | — | — | — |")
+        elif status == "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{r['scan_peak_gb_dev']:.2f} | "
+                  f"{'yes' if r.get('fits_hbm') else 'NO'} | "
+                  f"{r['scan_compile_s']:.0f} |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | "
+                  f"— | — | — |")
+
+    print("\n### Roofline terms (single-pod 16x16 = 256 chips)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+          "MODEL_FLOPS | useful | roofline frac | E/step J | E dom |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|---:|---|")
+    for key, r in sorted(res.items()):
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        en = r.get("energy", {})
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(rf['t_compute_s'])} | "
+              f"{fmt_t(rf['t_memory_s'])} | {fmt_t(rf['t_collective_s'])} | "
+              f"**{rf['dominant']}** | {rf['model_flops']:.2e} | "
+              f"{rf['useful_compute_ratio']:.2f} | "
+              f"{rf['roofline_fraction']:.4f} | "
+              f"{en.get('e_total_j', 0):.1f} | {en.get('dominant','')} |")
+
+    # hillclimb variants, grouped
+    tagged = {k: r for k, r in res.items() if r.get("tag")}
+    if tagged:
+        print("\n### Hillclimb variants\n")
+        print("| cell | levers | dominant | t_dom | frac | peak GB |")
+        print("|---|---|---|---:|---:|---:|")
+        for key, r in sorted(tagged.items()):
+            rf = r.get("roofline", {})
+            if not rf:
+                continue
+            dom_t = {"compute": rf["t_compute_s"], "memory":
+                     rf["t_memory_s"],
+                     "collective": rf["t_collective_s"]}[rf["dominant"]]
+            print(f"| {key} | {r['levers']} | {rf['dominant']} | "
+                  f"{fmt_t(dom_t)} | {rf['roofline_fraction']:.4f} | "
+                  f"{r['scan_peak_gb_dev']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

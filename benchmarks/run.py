@@ -1,0 +1,154 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo contract, where
+``derived`` is the headline quantity the table/figure reports (MAPE, energy
+ratios, densities, ...).  The roofline/dry-run tables live in
+benchmarks/results/dryrun.json (built by ``python -m repro.launch.dryrun``)
+and are summarized by ``roofline_table`` below when present.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _timed(fn: Callable) -> tuple:
+    t0 = time.perf_counter()
+    out = fn()
+    dt = (time.perf_counter() - t0) * 1e6
+    return out, dt
+
+
+def fig7_validation() -> List[str]:
+    """Fig. 7 / Tbl. 2: nine-chip validation (MAPE + Pearson)."""
+    from repro.core.chips import validate_all
+    r, us = _timed(lambda: validate_all())
+    rows = [f"fig7_validation,{us:.0f},mape={r['mape']*100:.1f}%"
+            f" pearson={r['pearson']:.5f}"]
+    for row in r["rows"]:
+        rows.append(f"fig7_{row['chip']},{us/9:.0f},"
+                    f"est={row['estimated_pj']:.1f}pJ"
+                    f" rep={row['reported_pj']:.1f}pJ"
+                    f" err={row['error']*100:.1f}%")
+    return rows
+
+
+def fig9a_rhythmic() -> List[str]:
+    """Fig. 9a: Rhythmic Pixel Regions in/off/3D energy."""
+    from repro.core.usecases import run_study
+    rows_, us = _timed(lambda: run_study("rhythmic"))
+    out = []
+    for r in rows_:
+        bd = " ".join(f"{k}={v:.1f}" for k, v in
+                      sorted(r["breakdown_uj"].items()))
+        out.append(f"fig9a_{r['cis_node']}nm_{r['variant']},{us:.0f},"
+                   f"total={r['total_uj']:.1f}uJ {bd}")
+    return out
+
+
+def fig9b_edgaze() -> List[str]:
+    """Fig. 9b + Fig. 11: Ed-Gaze variants incl. mixed-signal."""
+    from repro.core.usecases import run_study
+    rows_, us = _timed(lambda: run_study("edgaze"))
+    out = []
+    for r in rows_:
+        out.append(f"fig9b_{r['cis_node']}nm_{r['variant']},{us:.0f},"
+                   f"total={r['total_uj']:.1f}uJ")
+    return out
+
+
+def tbl3_power_density() -> List[str]:
+    """Tbl. 3: power density across variants."""
+    from repro.core.usecases import run_study
+    out = []
+    for algo in ("rhythmic", "edgaze"):
+        rows_, us = _timed(lambda a=algo: run_study(a))
+        for r in rows_:
+            out.append(f"tbl3_{algo}_{r['cis_node']}nm_{r['variant']},"
+                       f"{us:.0f},density={r['density_mw_mm2']:.3f}mW/mm2")
+    return out
+
+
+def fig12_stage_breakdown() -> List[str]:
+    """Fig. 12/13: Ed-Gaze memory/compute split, digital vs mixed."""
+    from repro.core.usecases import run_study
+    from repro.core.usecases.study import find_row
+    rows_, us = _timed(lambda: run_study("edgaze", cis_nodes=(65,)))
+    dig = find_row(rows_, "2d_in", 65)
+    mix = find_row(rows_, "2d_in_mixed", 65)
+    out = []
+    for name, r in (("digital", dig), ("mixed", mix)):
+        out.append(f"fig12_{name},{us:.0f},"
+                   f"total={r['total_uj']:.1f}uJ"
+                   f" mem_d={r['breakdown_uj'].get('MEM-D', 0):.1f}uJ"
+                   f" comp_a={r['breakdown_uj'].get('COMP-A', 0):.2f}uJ"
+                   f" comp_d={r['breakdown_uj'].get('COMP-D', 0):.2f}uJ")
+    return out
+
+
+def kernel_microbench() -> List[str]:
+    """Pallas kernels (interpret-mode walltime — correctness-harness
+    throughput, NOT a TPU number)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    ker = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
+    out = []
+    for name, fn in (
+            ("binning", lambda: ops.binning(img).block_until_ready()),
+            ("stencil_conv", lambda: ops.stencil_conv(img, ker)
+             .block_until_ready()),
+            ("frame_event", lambda: ops.frame_event(img, img)
+             .block_until_ready())):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        out.append(f"kernel_{name},{us:.0f},interpret_mode")
+    return out
+
+
+def roofline_table() -> List[str]:
+    """§Roofline summary from the dry-run results (if present)."""
+    path = os.path.join(RESULTS, "dryrun.json")
+    if not os.path.exists(path):
+        return ["roofline_table,0,missing (run python -m repro.launch.dryrun)"]
+    with open(path) as f:
+        results = json.load(f)
+    out = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        out.append(
+            f"roofline_{rec['arch']}_{rec['shape']},0,"
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.4f}"
+            f" tc={r['t_compute_s']:.3e} tm={r['t_memory_s']:.3e}"
+            f" tcoll={r['t_collective_s']:.3e}"
+            f" useful={r['useful_compute_ratio']:.2f}")
+    return out or ["roofline_table,0,no completed cells yet"]
+
+
+BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
+           fig12_stage_breakdown, kernel_microbench, roofline_table]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            for row in bench():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},0,ERROR {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

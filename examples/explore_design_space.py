@@ -1,0 +1,51 @@
+"""Architectural exploration: the paper's core promise, as a script.
+
+Sweeps the Ed-Gaze system over CIS process nodes and design variants
+(Sec. 6), prints the trade-off table, and demonstrates the decoupled
+interface: the *same* algorithm DAG is re-mapped across hardware variants
+by swapping the mapping/hardware only.
+
+Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
+the same component-energy methodology applied to the 256-chip training
+step.
+
+Run:  PYTHONPATH=src python examples/explore_design_space.py
+"""
+import json
+import os
+
+from repro.core.usecases import run_study
+
+
+def main():
+    print("=== Ed-Gaze design space (Sec. 6) ===")
+    print(f"{'node':>6} {'variant':<14} {'total uJ':>10} {'MEM-D uJ':>10} "
+          f"{'mW/mm^2':>9}")
+    for r in run_study("edgaze"):
+        print(f"{r['cis_node']:>5}n {r['variant']:<14} "
+              f"{r['total_uj']:>10.1f} "
+              f"{r['breakdown_uj'].get('MEM-D', 0):>10.1f} "
+              f"{r['density_mw_mm2']:>9.3f}")
+
+    print("\n=== Rhythmic Pixel Regions ===")
+    for r in run_study("rhythmic"):
+        print(f"{r['cis_node']:>5}n {r['variant']:<14} "
+              f"{r['total_uj']:>10.1f}")
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "results", "dryrun.json")
+    if os.path.exists(path):
+        print("\n=== CamJ-for-TPU: per-step energy of the compiled "
+              "training/serving steps (256 chips) ===")
+        with open(path) as f:
+            results = json.load(f)
+        print(f"{'cell':<42} {'E/step J':>9} {'dominant':>9}")
+        for key, rec in sorted(results.items()):
+            if rec.get("status") == "ok" and "energy" in rec:
+                e = rec["energy"]
+                print(f"{key:<42} {e['e_total_j']:>9.2f} "
+                      f"{e['dominant']:>9}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Serving example: batched prefill + decode with KV/SSM caches.
+
+Exercises the production serving path (prefill fills the cache, decode
+steps extend it) on a reduced config, including the sliding-window ring
+buffer (mixtral) and O(1) SSM state (falcon-mamba).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch mixtral_8x7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.models.model as M
+from repro.configs import ARCH_IDS, get_config, reduced
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral_8x7b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    if cfg.family == "vlm":
+        raise SystemExit("use a text arch for this example")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    B, S = args.batch, args.prompt_len
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    batch = {"tokens": prompt}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+
+    max_seq = S + args.new_tokens
+    cache = M.init_cache(cfg, B, max_seq=max_seq)
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(cache))
+    print(f"arch={args.arch} family={cfg.family} cache={cache_bytes/1e6:.2f}"
+          f" MB (window={cfg.sliding_window or 'full'})")
+
+    prefill = jax.jit(lambda p, b, c: M.prefill(p, b, c, cfg))
+    decode = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    generated = [toks]
+    t0 = time.perf_counter()
+    for _ in range(args.new_tokens - 1):
+        logits, cache = decode(params, toks, cache)
+        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"prefill {S} tokens x{B}: {t_prefill*1e3:.1f} ms; "
+          f"decode {args.new_tokens} tokens: "
+          f"{t_decode/max(args.new_tokens-1,1)*1e3:.2f} ms/token")
+    print("sample continuation (seq 0):", out[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing."""
+from .manager import CheckpointManager, restore_resharded
+
+__all__ = ["CheckpointManager", "restore_resharded"]

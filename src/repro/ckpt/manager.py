@@ -1,0 +1,163 @@
+"""Checkpoint manager: atomic, async, keep-K, resume, elastic re-shard.
+
+Format: one ``step_<N>/`` directory per checkpoint holding an ``.npz`` with
+flattened ``path -> array`` entries plus a JSON manifest (step, metadata).
+Writes go to ``step_<N>.tmp`` and are renamed only when complete, so a
+preempted writer never corrupts the latest checkpoint.  ``async_save``
+snapshots to host memory synchronously (cheap) and writes on a background
+thread (the train loop never blocks on disk).
+
+``restore_resharded`` re-materializes a checkpoint under a *different* mesh
+(elastic scaling): arrays are loaded on host and ``jax.device_put`` with the
+new NamedShardings — growing or shrinking the data axis between runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_k(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _k(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten_into(skeleton: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_k(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing parameter {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key!r}: checkpoint "
+                             f"{arr.shape} vs model {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, params: Any, opt_state: Any = None,
+             metadata: Optional[Dict] = None) -> str:
+        self.wait()
+        return self._write(step, params, opt_state, metadata or {})
+
+    def async_save(self, step: int, params: Any, opt_state: Any = None,
+                   metadata: Optional[Dict] = None) -> None:
+        """Snapshot to host now; write on a background thread."""
+        self.wait()
+        flat = _flatten(params)
+        flat_opt = _flatten(opt_state) if opt_state is not None else None
+        md = dict(metadata or {})
+
+        def work():
+            try:
+                self._write_flat(step, flat, flat_opt, md)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def _write(self, step, params, opt_state, metadata) -> str:
+        return self._write_flat(step, _flatten(params),
+                                _flatten(opt_state) if opt_state is not None
+                                else None, metadata)
+
+    def _write_flat(self, step, flat, flat_opt, metadata) -> str:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "params.npz"), **flat)
+        if flat_opt is not None:
+            np.savez(os.path.join(tmp, "opt_state.npz"), **flat_opt)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "metadata": metadata}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, skeleton_params: Any, skeleton_opt: Any = None,
+                step: Optional[int] = None) -> Tuple[Any, Any, Dict]:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        flat = dict(np.load(os.path.join(d, "params.npz")))
+        params = _unflatten_into(skeleton_params, flat)
+        opt = None
+        if skeleton_opt is not None:
+            flat_opt = dict(np.load(os.path.join(d, "opt_state.npz")))
+            opt = _unflatten_into(skeleton_opt, flat_opt)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return params, opt, manifest
+
+
+def restore_resharded(manager: CheckpointManager, skeleton: Any,
+                      shardings: Any, step: Optional[int] = None) -> Any:
+    """Elastic restore: place checkpointed arrays under NEW shardings."""
+    params, _, _ = manager.restore(skeleton, None, step)
+    return jax.tree.map(
+        lambda arr, sh: jax.device_put(arr, sh), params, shardings)

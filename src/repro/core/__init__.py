@@ -1,0 +1,47 @@
+"""CamJ core: component-level energy modeling for computational CIS.
+
+Public API mirrors the paper's declarative interface (Fig. 5): describe the
+algorithm as a DAG of stencil stages, the hardware as analog functional
+arrays + digital units + memories, map one onto the other, and call
+``estimate_energy``.
+"""
+from .acell import (ACell, DynamicCell, NonLinearCell, StaticCell,
+                    component_energy, thermal_noise_capacitance)
+from .acomponent import (AComponent, ActiveAnalogMemory, ActivePixelSensor,
+                         AnalogAbs, AnalogAdder, AnalogLog, AnalogMax,
+                         AnalogScaling, AnalogSubtractor,
+                         AnalogToDigitalConverter, Comparator,
+                         CurrentMirrorMAC, DigitalPixelSensor,
+                         PassiveAnalogMemory, PassiveAverager,
+                         PulseWidthModulationPixel, SwitchedCapacitorMAC)
+from .afa import AnalogArray
+from .checks import DesignCheckError, run_design_checks
+from .constants import (MIPI_CSI2_ENERGY_PER_BYTE, UTSV_ENERGY_PER_BYTE,
+                        scale_energy, sram_access_energy)
+from .delay import DelayReport, estimate_delays
+from .digital import (ComputeUnit, DoubleBuffer, FIFO, LineBuffer, MemoryBase,
+                      SystolicArray)
+from .domains import Domain, compatible
+from .energy import EnergyReport, UnitEnergy, estimate_energy
+from .fom import adc_energy_per_conversion, walden_fom
+from .hw import DigitalBinding, HWConfig
+from .mapping import Mapping
+from .sw import (DNNProcessStage, PixelInput, ProcessStage, Stage,
+                 topological_order)
+
+__all__ = [
+    "ACell", "DynamicCell", "StaticCell", "NonLinearCell", "component_energy",
+    "thermal_noise_capacitance", "AComponent", "ActivePixelSensor",
+    "DigitalPixelSensor", "PulseWidthModulationPixel",
+    "AnalogToDigitalConverter", "Comparator", "SwitchedCapacitorMAC",
+    "CurrentMirrorMAC", "PassiveAverager", "AnalogAdder", "AnalogSubtractor",
+    "AnalogMax", "AnalogScaling", "AnalogLog", "AnalogAbs",
+    "PassiveAnalogMemory", "ActiveAnalogMemory", "AnalogArray", "Domain",
+    "compatible", "ComputeUnit", "SystolicArray", "FIFO", "LineBuffer",
+    "DoubleBuffer", "MemoryBase", "HWConfig", "DigitalBinding", "Mapping",
+    "PixelInput", "ProcessStage", "DNNProcessStage", "Stage",
+    "topological_order", "estimate_delays", "DelayReport", "estimate_energy",
+    "EnergyReport", "UnitEnergy", "run_design_checks", "DesignCheckError",
+    "walden_fom", "adc_energy_per_conversion", "scale_energy",
+    "sram_access_energy", "MIPI_CSI2_ENERGY_PER_BYTE", "UTSV_ENERGY_PER_BYTE",
+]

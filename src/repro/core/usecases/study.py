@@ -1,0 +1,53 @@
+"""Run the Sec. 6 studies: energy tables (Fig. 9/11) + power density (Tbl. 3)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..energy import estimate_energy
+from .edgaze import EDGAZE_VARIANTS, build_edgaze
+from .rhythmic import RHYTHMIC_VARIANTS, build_rhythmic
+
+
+def power_density(hw, report) -> Dict[str, float]:
+    """Conservative power-density upper bound (Sec. 6.2).
+
+    Analog area ~ pixel array; digital area ~ SRAM macros.  For 2D designs
+    the footprint is the sum; for stacked designs it is the max layer.
+    On-sensor power only (the SoC in 2d_off doesn't heat the sensor die).
+    """
+    power = report.on_sensor_power(hw.frame_rate)
+    area = hw.total_area_mm2()
+    return dict(power_mw=power * 1e3, area_mm2=area,
+                density_mw_mm2=power * 1e3 / max(area, 1e-9))
+
+
+def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
+              strict: bool = False) -> List[Dict]:
+    """Evaluate every variant x CIS node for one algorithm.
+
+    Returns rows with total energy, category breakdown and power density.
+    """
+    build = {"rhythmic": build_rhythmic, "edgaze": build_edgaze}[algorithm]
+    variants = (RHYTHMIC_VARIANTS if algorithm == "rhythmic"
+                else EDGAZE_VARIANTS)
+    rows = []
+    for node in cis_nodes:
+        for variant in variants:
+            hw, stages, mapping, meta = build(variant, cis_node=node,
+                                              soc_node=soc_node)
+            rep = estimate_energy(hw, stages, mapping, strict=strict)
+            rows.append(dict(
+                algorithm=algorithm, variant=variant, cis_node=node,
+                total_uj=rep.total() * 1e6,
+                on_sensor_uj=rep.total(include_off_sensor=False) * 1e6,
+                breakdown_uj={k: v * 1e6 for k, v in
+                              rep.by_category().items()},
+                **power_density(hw, rep)))
+    return rows
+
+
+def find_row(rows: List[Dict], variant: str, node: int) -> Dict:
+    for r in rows:
+        if r["variant"] == variant and r["cis_node"] == node:
+            return r
+    raise KeyError((variant, node))

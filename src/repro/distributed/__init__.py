@@ -1,0 +1,8 @@
+"""Distributed substrate: mesh context, sharding rules, collective helpers."""
+from .shardctx import axis_size, constrain, current_mesh, use_mesh
+from .sharding import (batch_spec, cache_shardings, input_shardings,
+                       logical_to_sharding, param_shardings, spec_for_param)
+
+__all__ = ["use_mesh", "current_mesh", "constrain", "axis_size", "param_shardings",
+           "spec_for_param", "input_shardings", "batch_spec",
+           "logical_to_sharding", "cache_shardings"]

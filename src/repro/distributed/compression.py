@@ -1,0 +1,77 @@
+"""Gradient compression for cross-pod reduction (int8 + error feedback).
+
+The 'pod' mesh axis is the expensive one (DCN, not ICI — the MIPI of the
+TPU world, per the CamJ analogy).  ``compressed_psum_mean`` quantizes each
+shard to int8 with a per-tensor scale and all-reduces the int8 payload —
+4x fewer DCN bytes than f32 (the reduction itself accumulates in int32 to
+avoid overflow; the wire format of a real ring all-reduce is the int8
+payload plus one f32 scale per shard) — then dequantizes.
+``ErrorFeedback`` accumulates the quantization residual into the next step
+so the compression bias vanishes over time (Karimireddy et al. style).
+
+Used via shard_map over the 'pod' axis; unit-tested on a host-device mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str,
+                         error: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Mean-reduce ``x`` over ``axis_name`` in int8 with error feedback.
+
+    Returns (reduced, new_error).  Call inside shard_map with the reduction
+    axis manual.
+    """
+    x32 = x.astype(jnp.float32) + error
+    q, scale = quantize_int8(x32)
+    sent = dequantize_int8(q, scale)
+    new_error = x32 - sent                       # residual kept locally
+    # int8 payload summed in int32 (wire format: int8 + per-shard scale)
+    summed = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
+    scale_sum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    # per-shard scales are close (gradients similar across pods); use the
+    # mean scale — the residual goes into error feedback either way
+    mean_scale = scale_sum / n
+    reduced = summed.astype(jnp.float32) * mean_scale / n
+    return reduced.astype(x.dtype), new_error
+
+
+def cross_pod_grad_reduce(grads: Any, mesh: Mesh, errors: Any) -> Tuple[Any, Any]:
+    """Apply compressed mean-reduction over the 'pod' axis to a grad tree.
+
+    grads enter pod-local (each pod computed its own mean over its batch
+    slice); leave pod-averaged.  ``errors`` is a matching f32 tree.
+    """
+    if "pod" not in mesh.shape:
+        return grads, errors
+
+    def one(g, e):
+        def fn(gg, ee):
+            return compressed_psum_mean(gg, "pod", ee)
+        spec = P(*([None] * g.ndim))
+        return jax.shard_map(fn, mesh=mesh,
+                             in_specs=(spec, spec), out_specs=(spec, spec),
+                             check_vma=False)(g, e)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))

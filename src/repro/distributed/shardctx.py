@@ -1,0 +1,90 @@
+"""Mesh context: lets model code state sharding intent without importing a
+mesh.  Outside a mesh context every constraint is a no-op, so the same model
+runs single-device (smoke tests) and 512-chip (dry-run) unchanged.
+
+Axis-name convention: ``data`` (batch / fsdp), ``model`` (tensor), ``pod``
+(cross-pod data parallel).  ``constrain(x, 'data', None, 'model')`` maps the
+named axes onto whatever mesh is active; axes absent from the mesh are
+dropped from the spec (e.g. single-pod meshes have no 'pod' axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_profile() -> str:
+    return getattr(_state, "profile", "tp")
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, profile: str = "tp"):
+    """profile: 'tp' (2-D FSDP x TP, baseline) or 'fsdp' (both mesh axes
+    carry data parallelism; params ZeRO-3-shard over the flattened axes and
+    no tensor dimension is model-sharded — the small-model hillclimb lever,
+    EXPERIMENTS.md §Perf)."""
+    prev = current_mesh()
+    prev_prof = current_profile()
+    _state.mesh = mesh
+    _state.profile = profile
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+        _state.profile = prev_prof
+
+
+def _filter_spec(mesh: Mesh, axes, profile: str = "tp") -> P:
+    names = set(mesh.axis_names)
+
+    def remap(a):
+        if profile != "fsdp":
+            return a
+        # fsdp profile: no tensor-parallel sharding; batch-ish axes span both
+        if a == "model":
+            return None
+        if a == "data" or (isinstance(a, (tuple, list)) and "data" in a):
+            return tuple(x for x in ("pod", "data", "model") if x in names)
+        return a
+
+    def keep(a):
+        a = remap(a)
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(x for x in a if x in names)
+            return kept if kept else None
+        return a if a in names else None
+
+    return P(*(keep(a) for a in axes))
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis in the active context (1 if absent/no mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return mesh.shape.get(name, 1)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint iff a mesh is active; no-op otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _filter_spec(mesh, axes, current_profile())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, _filter_spec(mesh, axes))

@@ -1,0 +1,201 @@
+"""Sharding rules: parameter/optimizer/input PartitionSpecs.
+
+Scheme: 2-D FSDP x TP ("data" x "model") with an optional "pod" axis that
+carries pure data parallelism (gradient all-reduce is the only cross-pod
+collective — the CamJ in-vs-off-sensor split applied to the ICI/DCN
+hierarchy, see DESIGN.md §3).
+
+Rules are name-based with divisibility-checked fallbacks: any named mesh
+axis that does not evenly divide its dimension is dropped (replicated) —
+e.g. mixtral's 8 experts on a 16-way model axis fall back to TP inside the
+expert matrices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA = ("pod", "data")   # batch axes (pod folded into data parallelism)
+
+
+def _fits(mesh: Mesh, axes, shape) -> bool:
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for n in names:
+            if n in mesh.shape:
+                size *= mesh.shape[n]
+        if size and dim % size != 0:
+            return False
+    return True
+
+
+def _choose(mesh: Mesh, shape, *candidates) -> P:
+    """First candidate whose every axis divides; else per-axis fallback."""
+    for axes in candidates:
+        if _fits(mesh, axes, shape):
+            return P(*_strip(mesh, axes))
+    axes = list(candidates[0])
+    for i, ax in enumerate(axes):
+        if ax is not None and not _fits(mesh, [ax], [shape[i]]):
+            axes[i] = None
+    return P(*_strip(mesh, axes))
+
+
+def _strip(mesh: Mesh, axes):
+    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod)."""
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a in mesh.shape)
+            out.append(kept if kept else None)
+        else:
+            out.append(ax if ax in mesh.shape else None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (matched on the trailing path name)
+# ---------------------------------------------------------------------------
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    name = path.split("/")[-1]
+    nd = len(shape)
+    stacked = path.startswith("layers/") or "_layers/" in path
+    lead = (None,) if (stacked and nd >= 2) else ()
+    body = shape[1:] if lead else shape
+
+    def ch(*cands):
+        return _choose(mesh, shape, *[lead + c for c in cands])
+
+    if name == "embed":
+        return _choose(mesh, shape, ("model", "data"), (None, "data"))
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "bc_proj",
+                "dt_proj2", "cross_wk", "cross_wv", "cross_wq"):
+        return ch(("data", "model"))
+    if name in ("wo", "w_down", "out_proj", "x_proj", "cross_wo"):
+        return ch(("model", "data"))
+    if name in ("bq", "bk", "bv", "dt_bias", "conv_b", "d_skip"):
+        return ch(("model",))
+    if name == "router":
+        return ch(("data", None))
+    if name in ("we_gate", "we_up"):            # (E, D, Fe)
+        return ch(("model", "data", None), (None, "data", "model"))
+    if name == "we_down":                       # (E, Fe, D)
+        return ch(("model", None, "data"), (None, "model", "data"))
+    if name == "conv_w":                        # (dI, K)
+        return ch(("model", None))
+    if name == "a_log":                         # (dI, N) or (nh,)
+        if len(body) == 2:
+            return ch(("model", None))
+        return ch(("model",))
+    if name == "dt_proj":                       # (R, dI) or (D, nh)
+        return ch(("data", "model"))
+    # norms, scalars, positional tables: replicate
+    return P(*([None] * nd))
+
+
+def param_shardings(params: Any, mesh: Mesh, profile: str = "tp") -> Any:
+    """PartitionSpec tree matching ``params`` (works on ShapeDtypeStructs).
+
+    profile='fsdp': ZeRO-3 — every matrix shards its largest dimension over
+    the flattened ('data','model') axes (no tensor parallelism); weights are
+    all-gathered per layer instead of activations.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    both = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    n_both = 1
+    for a in both:
+        n_both *= mesh.shape[a]
+    for path, leaf in flat:
+        pstr = "/".join(_key_str(k) for k in path)
+        if profile == "fsdp":
+            axes = [None] * len(leaf.shape)
+            dims = sorted(range(len(leaf.shape)),
+                          key=lambda i: -leaf.shape[i])
+            for i in dims:
+                if leaf.shape[i] % n_both == 0:
+                    axes[i] = both
+                    break
+            specs.append(NamedSharding(mesh, P(*axes)))
+        else:
+            specs.append(NamedSharding(mesh,
+                                       spec_for_param(pstr, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Inputs / caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1,
+               profile: str = "tp") -> P:
+    """Shard the batch over (pod, data) when divisible, else replicate.
+    fsdp profile spreads the batch over every mesh axis."""
+    axes_b = (("pod", "data", "model") if profile == "fsdp" else DATA)
+    axes: Tuple = (axes_b,) + (None,) * extra_dims
+    return _choose(mesh, (batch,) + (1 << 30,) * extra_dims, axes)
+
+
+def cache_shardings(mesh: Mesh, cache: Any, batch: int) -> Any:
+    """NamedSharding tree for a decode/prefill cache.
+
+    When the batch shards over (pod, data) the sequence axis stays local;
+    for batch=1 long-context cells the kv-cache *sequence* axis shards over
+    'data' instead (context parallelism) — the softmax over the sharded key
+    axis lowers to partial reductions + all-reduce.
+    """
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    batched = batch % dp == 0 and dp > 1
+
+    def spec(path: str, leaf) -> P:
+        nd = len(leaf.shape)
+        name = path.split("/")[-1]
+        if name == "pos":
+            return P()
+        if name in ("kv_k", "kv_v"):            # (L, B, S, KV*hd)
+            axes = ((None, DATA, None, "model") if batched
+                    else (None, None, "data", "model"))
+            return _choose(mesh, leaf.shape, axes)
+        if name == "conv":                       # (L, B, dI, K-1)
+            axes = ((None, DATA, "model", None) if batched
+                    else (None, None, "model", None))
+            return _choose(mesh, leaf.shape, axes)
+        if name == "ssm":                        # (L,B,dI,N) or (L,B,nh,p,N)
+            axes = ((None, DATA, "model") + (None,) * (nd - 3) if batched
+                    else (None, None, "model") + (None,) * (nd - 3))
+            return _choose(mesh, leaf.shape, axes)
+        if name == "enc_out":                    # (B, Senc, D)
+            axes = ((DATA, None, "model") if batched
+                    else (None, None, "model"))
+            return _choose(mesh, leaf.shape, axes)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, spec("/".join(_key_str(k) for k in path), leaf))
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def input_shardings(mesh: Mesh, batch: int) -> Dict[str, NamedSharding]:
+    tok = NamedSharding(mesh, batch_spec(mesh, batch, extra_dims=1))
+    emb = NamedSharding(mesh, _choose(
+        mesh, (batch, 1 << 30, 1 << 30), (DATA, None, "model")))
+    return {"tokens": tok, "embeds": emb}
+
+
+def logical_to_sharding(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*_strip(mesh, axes)))

@@ -1,0 +1,7 @@
+"""Roofline + CamJ-for-TPU energy bridge (reads the compiled dry-run)."""
+from .hlo import collective_bytes, parse_collectives
+from .roofline import (HW, RooflineTerms, model_flops, roofline_terms)
+from .tpu_energy import tpu_energy_report
+
+__all__ = ["parse_collectives", "collective_bytes", "roofline_terms",
+           "RooflineTerms", "model_flops", "HW", "tpu_energy_report"]

@@ -1,0 +1,12 @@
+"""Functional (numerical) simulation of declared sensor pipelines in JAX.
+
+CamJ's declarative stages describe *what* a pipeline computes; this package
+executes it, so the declared DAG can be checked for functional correctness
+and noise behaviour (thermal kT/C noise per Eq. 6) before energy estimation.
+"""
+from .noise import thermal_noise_sigma_volts, with_thermal_noise
+from .pipelines import (edgaze_frontend, fig5_pipeline,
+                        rhythmic_pixel_frontend, simple_dnn)
+
+__all__ = ["fig5_pipeline", "edgaze_frontend", "rhythmic_pixel_frontend",
+           "simple_dnn", "with_thermal_noise", "thermal_noise_sigma_volts"]

@@ -1,0 +1,26 @@
+"""Thermal-noise injection for the functional simulator (Eq. 6).
+
+An analog stage realized with capacitance C carries kT/C sampling noise;
+the functional simulator can inject it to study precision/energy trade-offs
+(smaller C = cheaper dynamic energy = more noise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.constants import BOLTZMANN, ROOM_TEMPERATURE
+
+
+def thermal_noise_sigma_volts(capacitance: float,
+                              temperature: float = ROOM_TEMPERATURE) -> float:
+    """sigma = sqrt(kT/C) in volts."""
+    return float((BOLTZMANN * temperature / capacitance) ** 0.5)
+
+
+def with_thermal_noise(key: jax.Array, signal: jax.Array,
+                       capacitance: float, v_swing: float = 1.0) -> jax.Array:
+    """Add kT/C noise to a normalized [0,1] signal sampled on ``capacitance``."""
+    sigma = thermal_noise_sigma_volts(capacitance) / v_swing
+    return signal + sigma * jax.random.normal(key, signal.shape,
+                                              dtype=signal.dtype)

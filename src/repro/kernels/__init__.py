@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Sensor side (the paper's stencil workloads): binning, stencil_conv,
+frame_event.  LM side: matmul (MXU-tiled), flash_attention (online softmax,
+GQA-aware).  ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles.
+"""
+from . import ops, ref
+from .binning import binning
+from .flash_attention import flash_attention
+from .frame_event import frame_event
+from .matmul import matmul
+from .stencil_conv import stencil_conv
+
+__all__ = ["ops", "ref", "binning", "flash_attention", "frame_event",
+           "matmul", "stencil_conv"]

@@ -1,0 +1,36 @@
+"""Pallas TPU kernel: frame differencing + threshold (Ed-Gaze S2).
+
+The mixed-signal use-case (Sec. 6.3) implements |cur - prev| >= t with a
+switched-capacitor subtractor + comparator; the digital twin is a pure
+element-wise VPU kernel.  Trivially blockable: row strips, no halo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _event_kernel(cur_ref, prev_ref, o_ref, *, threshold: float):
+    diff = jnp.abs(cur_ref[...].astype(jnp.float32)
+                   - prev_ref[...].astype(jnp.float32))
+    o_ref[...] = (diff >= threshold).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "block_rows", "interpret"))
+def frame_event(cur: jax.Array, prev: jax.Array, threshold: float = 0.1,
+                block_rows: int = 64, interpret: bool = True) -> jax.Array:
+    h, w = cur.shape
+    block_rows = max(min(block_rows, h), 1)
+    while h % block_rows:
+        block_rows -= 1
+    grid = (h // block_rows,)
+    spec = pl.BlockSpec((block_rows, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_event_kernel, threshold=threshold),
+        grid=grid, in_specs=[spec, spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, w), cur.dtype),
+        interpret=interpret,
+    )(cur, prev)

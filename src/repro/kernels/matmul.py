@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: MXU-tiled matmul with f32 accumulation.
+
+Used by the DNN stages of the sensor pipelines (systolic-array twin) and as
+the building block the LM-side kernels are benchmarked against.  Blocks are
+MXU-aligned (multiples of 128 on the contracting/lane dims); the K loop is
+the innermost grid dimension so the f32 VMEM scratch accumulator carries
+across sequential grid steps on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                            b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = True) -> jax.Array:
+    """a [M,K] @ b [K,N] -> [M,N]; pads every dim up to the block size."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = max(min(bm, m), 1), max(min(bn, n), 1), max(min(bk, k), 1)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    gm, gn, gk = (m + pm) // bm, (n + pn) // bn, (k + pk) // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

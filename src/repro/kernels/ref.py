@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth used by the per-kernel allclose
+tests; no Pallas, no sharding, no tiling tricks — just jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binning_ref(image: jax.Array, factor: int = 2) -> jax.Array:
+    """factor x factor average pooling, stride = factor (pixel binning)."""
+    h, w = image.shape[-2:]
+    hh, ww = h // factor, w // factor
+    x = image[..., : hh * factor, : ww * factor]
+    x = x.reshape(*x.shape[:-2], hh, factor, ww, factor)
+    return x.mean(axis=(-3, -1))
+
+
+def stencil_conv_ref(image: jax.Array, kernel: jax.Array) -> jax.Array:
+    """'valid' 2-D correlation of a single-channel image with a kxk stencil."""
+    kh, kw = kernel.shape
+    h, w = image.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    out = jnp.zeros((oh, ow), dtype=jnp.promote_types(image.dtype, kernel.dtype))
+    for di in range(kh):
+        for dj in range(kw):
+            out = out + kernel[di, dj] * image[di:di + oh, dj:dj + ow]
+    return out.astype(image.dtype)
+
+
+def frame_event_ref(cur: jax.Array, prev: jax.Array,
+                    threshold: float) -> jax.Array:
+    """Ed-Gaze S2: |cur - prev| thresholded into a binary event map."""
+    return (jnp.abs(cur.astype(jnp.float32) - prev.astype(jnp.float32))
+            >= threshold).astype(cur.dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain matmul with f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Reference attention.  q: [B,H,S,D], k/v: [B,Hkv,S,D] (GQA broadcast)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

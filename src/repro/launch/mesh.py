@@ -1,0 +1,46 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run entrypoint
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import; everything else (smoke tests, benches) sees the real device
+count.
+
+Topology mapping (TPU v5e): the single-pod mesh is one 16x16 pod —
+(data=16, model=16); 'model' rides the fastest ICI dimension (TP traffic is
+per-layer), 'data' the other (gradient reduce-scatter amortizes over the
+step).  The multi-pod mesh adds pod=2 over DCN: the only cross-pod
+collective is the once-per-step gradient all-reduce (optionally int8-
+compressed, distributed/compression.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only "
+            f"{len(jax.devices())} visible — run under dryrun.py, which "
+            f"sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    if data is None:
+        data = max(n // model, 1)
+    need = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:need],
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,180 @@
+"""Shared model components: norms, RoPE, blockwise attention (GQA/SWA),
+decode-step attention, and sharding-constraint helpers.
+
+Attention is blockwise over query chunks (flash-style memory behaviour in
+pure JAX: no S x S score tensor is ever materialized) with the chunk loop
+python-unrolled so HLO cost analysis counts every FLOP (see DESIGN.md §6).
+On real TPUs the Pallas flash kernel (repro.kernels.flash_attention) is the
+drop-in hot path; the pure-JAX chunked path is the lowering/validation path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardctx import axis_size, constrain
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, weight: Optional[jax.Array], eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def layernorm_np(x: jax.Array, eps: float = 1e-5):
+    """Non-parametric LayerNorm (OLMo): no learned scale or bias."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def norm(cfg: ModelConfig, x: jax.Array, weight: Optional[jax.Array]):
+    if cfg.non_parametric_ln:
+        return layernorm_np(x)
+    return rmsnorm(x, weight)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D] with positions [B, S] (or [S])."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B,S,D/2]
+    if angles.ndim == 2:                                  # [S, D/2]
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]                   # [B,S,1,D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 1024) -> jax.Array:
+    """q: [B,S,H,D], k/v: [B,Skv,KV,D] -> [B,S,H,D].
+
+    Query-chunked online computation; each chunk sees only the keys it can
+    attend to (causal prefix, further clipped by the sliding ``window``), so
+    peak score memory is B*H*q_chunk*Skv' — never S x S.
+    """
+    b, s, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = 1.0 / (d ** 0.5)
+    q_chunk = max(min(q_chunk, s), 1)
+    while s % q_chunk:
+        q_chunk -= 1
+
+    outs = []
+    for start in range(0, s, q_chunk):
+        qc = q[:, start:start + q_chunk]                    # [B,c,H,D]
+        if causal:
+            kv_end = start + q_chunk
+            kv_start = 0
+            if window:
+                kv_start = max(0, start - window)
+            kc = k[:, kv_start:kv_end]
+            vc = v[:, kv_start:kv_end]
+        else:
+            kv_start, kv_end = 0, skv
+            kc, vc = k, v
+        kc = _repeat_kv(kc, groups)
+        vc = _repeat_kv(vc, groups)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc, kc) * scale
+        # Scores are ALWAYS sharded over heads ('model'); when the head
+        # count doesn't divide (llava 56H on 16-way TP) GSPMD pads the head
+        # axis — a ~14% score-compute overhead, which is how real TP systems
+        # handle it.  Mixing head- and chunk-sharding here makes the
+        # partitioner fall back to full rematerialization (replicated
+        # B*H*c*Skv f32 tensors — measured 600+ GB/dev on llava).
+        scores = constrain(scores, "data", "model", None, None)
+        if causal:
+            qpos = start + jnp.arange(q_chunk)[:, None]
+            kpos = kv_start + jnp.arange(kv_end - kv_start)[None, :]
+            mask = qpos >= kpos
+            if window:
+                mask &= (qpos - kpos) < window
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        probs = probs.astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, vc)
+        outs.append(constrain(o, "data", None, "model", None))
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, window: int = 0,
+                     no_repeat: bool = False) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: [B,1,H,D]; k/v_cache: [B,Smax,KV,D]; cache_len: [] current length
+    (AFTER inserting the new token).  For sliding-window caches the buffer is
+    a ring of size ``window`` and every resident slot is valid once full.
+
+    ``no_repeat=True`` (§Perf lever): grouped einsum keeps K/V at KV heads —
+    no jnp.repeat materialization of the (B,Smax,H,D) expanded cache.
+    """
+    b, smax, kv, d = k_cache.shape
+    h = q.shape[2]
+    groups = h // kv
+    scale = 1.0 / (d ** 0.5)
+    positions = jnp.arange(smax)
+    if window:
+        valid = positions < jnp.minimum(cache_len, smax)
+    else:
+        valid = positions < cache_len
+
+    if no_repeat:
+        qg = q.reshape(b, 1, kv, groups, d)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache) * scale
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
+        return o.reshape(b, 1, h, d)
+
+    kc = _repeat_kv(k_cache, groups)
+    vc = _repeat_kv(v_cache, groups)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc) * scale  # [B,H,1,Smax]
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vc)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jax.Array:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)

@@ -1,0 +1,725 @@
+"""Unified model zoo: init / forward / prefill / decode for every family.
+
+Families: dense (olmo, qwen2/2.5/3), vlm (llava backbone, stub frontend),
+moe (granite, mixtral+SWA), ssm (falcon-mamba), hybrid (zamba2: mamba2 +
+shared attention block), encdec (whisper, stub audio frontend).
+
+Conventions:
+  * params are plain pytrees of jnp arrays; per-layer params are *stacked*
+    on a leading L axis and the layer stack is ``lax.scan`` + ``jax.remat``
+    (small HLO, fast compile, production idiom — MaxText-style);
+  * attention projections are fused 2-D mats so TP shards head counts that
+    don't divide the mesh (llava 56H, qwen2.5 40H on 16-way TP);
+  * caches are dicts of stacked buffers; SWA archs use ring buffers bounded
+    by the window, SSM archs carry O(1) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardctx import constrain
+from .common import apply_rope, chunked_attention, decode_attention, \
+    dense_init, norm, rmsnorm
+from .config import ModelConfig
+from .moe import moe_ffn
+from .ssm import mamba1_decode, mamba1_forward, mamba2_decode, mamba2_forward
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# Parameter construction (concrete + abstract share one shape spec)
+# ===========================================================================
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """Flat {path: (shape, dtype)} description of the parameter tree."""
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    dt = _dtype(cfg)
+    out: Dict[str, Tuple[Tuple[int, ...], Any]] = {
+        "embed": ((cfg.vocab, d), dt)}
+    if not cfg.non_parametric_ln:
+        out["final_norm"] = ((d,), dt)
+
+    def attn(prefix: str, stack: Tuple[int, ...], cross: bool = False):
+        p = "cross_" if cross else ""
+        out[f"{prefix}/{p}wq"] = (stack + (d, H * hd), dt)
+        out[f"{prefix}/{p}wk"] = (stack + (d, KV * hd), dt)
+        out[f"{prefix}/{p}wv"] = (stack + (d, KV * hd), dt)
+        out[f"{prefix}/{p}wo"] = (stack + (H * hd, d), dt)
+        if cfg.qkv_bias and not cross:
+            out[f"{prefix}/bq"] = (stack + (H * hd,), dt)
+            out[f"{prefix}/bk"] = (stack + (KV * hd,), dt)
+            out[f"{prefix}/bv"] = (stack + (KV * hd,), dt)
+        if cfg.qk_norm and not cross:
+            out[f"{prefix}/q_norm"] = (stack + (hd,), dt)
+            out[f"{prefix}/k_norm"] = (stack + (hd,), dt)
+
+    def mlp(prefix: str, stack: Tuple[int, ...]):
+        if cfg.family == "moe" and prefix.startswith("layers"):
+            E, Fe = cfg.n_experts, cfg.expert_d_ff
+            out[f"{prefix}/router"] = (stack + (d, E), dt)
+            out[f"{prefix}/we_gate"] = (stack + (E, d, Fe), dt)
+            out[f"{prefix}/we_up"] = (stack + (E, d, Fe), dt)
+            out[f"{prefix}/we_down"] = (stack + (E, Fe, d), dt)
+        else:
+            out[f"{prefix}/w_gate"] = (stack + (d, cfg.d_ff), dt)
+            out[f"{prefix}/w_up"] = (stack + (d, cfg.d_ff), dt)
+            out[f"{prefix}/w_down"] = (stack + (cfg.d_ff, d), dt)
+
+    def norms(prefix: str, stack: Tuple[int, ...], names):
+        if cfg.non_parametric_ln:
+            return
+        for n in names:
+            out[f"{prefix}/{n}"] = (stack + (d,), dt)
+
+    def mamba(prefix: str, stack: Tuple[int, ...]):
+        dI, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        out[f"{prefix}/norm"] = (stack + (d,), dt)
+        out[f"{prefix}/in_proj"] = (stack + (d, 2 * dI), dt)
+        out[f"{prefix}/conv_w"] = (stack + (dI, K), dt)
+        out[f"{prefix}/conv_b"] = (stack + (dI,), dt)
+        out[f"{prefix}/out_proj"] = (stack + (dI, d), dt)
+        if cfg.ssm_version == 1:
+            R = max(d // 16, 1)
+            out[f"{prefix}/x_proj"] = (stack + (dI, R + 2 * N), dt)
+            out[f"{prefix}/dt_proj"] = (stack + (R, dI), dt)
+            out[f"{prefix}/dt_bias"] = (stack + (dI,), dt)
+            out[f"{prefix}/a_log"] = (stack + (dI, N), dt)
+            out[f"{prefix}/d_skip"] = (stack + (dI,), dt)
+        else:
+            nh = cfg.ssm_heads
+            out[f"{prefix}/bc_proj"] = (stack + (d, 2 * N), dt)
+            out[f"{prefix}/dt_proj"] = (stack + (d, nh), dt)
+            out[f"{prefix}/dt_bias"] = (stack + (nh,), dt)
+            out[f"{prefix}/a_log"] = (stack + (nh,), dt)
+            out[f"{prefix}/d_skip"] = (stack + (nh,), dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        attn("layers", (L,))
+        mlp("layers", (L,))
+        norms("layers", (L,), ["attn_norm", "mlp_norm"])
+    elif fam == "ssm":
+        mamba("layers", (L,))
+    elif fam == "hybrid":
+        mamba("layers", (L,))
+        attn("shared", ())
+        out["shared/w_gate"] = ((d, cfg.d_ff), dt)
+        out["shared/w_up"] = ((d, cfg.d_ff), dt)
+        out["shared/w_down"] = ((cfg.d_ff, d), dt)
+        norms("shared", (), ["attn_norm", "mlp_norm"])
+    elif fam == "encdec":
+        Le = cfg.n_encoder_layers
+        attn("enc_layers", (Le,))
+        mlp("enc_layers", (Le,))
+        norms("enc_layers", (Le,), ["attn_norm", "mlp_norm"])
+        out["enc_final_norm"] = ((d,), dt)
+        attn("layers", (L,))
+        attn("layers", (L,), cross=True)
+        mlp("layers", (L,))
+        norms("layers", (L,), ["attn_norm", "cross_norm", "mlp_norm"])
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Params:
+    tree: Params = {}
+    for path, leaf in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return _unflatten({p: jax.ShapeDtypeStruct(s, d)
+                       for p, (s, d) in param_shapes(cfg).items()})
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    flat = {}
+    for (path, (shape, dtype)), k in zip(shapes.items(), keys):
+        name = path.split("/")[-1]
+        if "norm" in name:
+            flat[path] = jnp.ones(shape, dtype)
+        elif name in ("bq", "bk", "bv", "conv_b", "dt_bias"):
+            flat[path] = jnp.zeros(shape, dtype)
+        elif name == "a_log":
+            if len(shape) >= 2 and shape[-1] == cfg.ssm_state and \
+                    cfg.ssm_version == 1:
+                a = jnp.broadcast_to(
+                    jnp.log(jnp.arange(1, cfg.ssm_state + 1, dtype=jnp.float32)),
+                    shape)
+                flat[path] = a.astype(dtype)
+            else:
+                flat[path] = jnp.zeros(shape, dtype)  # A = -1
+        elif name == "d_skip":
+            flat[path] = jnp.ones(shape, dtype)
+        else:
+            flat[path] = dense_init(k, shape, dtype)
+    return _unflatten(flat)
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+def _proj_qkv(w, x, cfg: ModelConfig, positions, prefix=""):
+    B, S, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dq->bsq", x, w[prefix + "wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, w[prefix + "wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, w[prefix + "wv"])
+    if cfg.qkv_bias and not prefix:
+        q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm and not prefix:
+        q = rmsnorm(q, w["q_norm"])
+        k = rmsnorm(k, w["k_norm"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "data", None, "model", None)
+    return q, k, v
+
+
+def self_attention(w, x, cfg: ModelConfig, positions, causal=True,
+                   window=0) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(w, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=cfg.attn_q_chunk)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsq,qd->bsd", o, w["wo"])
+
+
+def cross_attention(w, x, memory, cfg: ModelConfig) -> jax.Array:
+    B, S, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dq->bsq", x, w["cross_wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dq->bsq", memory, w["cross_wk"]).reshape(
+        B, memory.shape[1], KV, hd)
+    v = jnp.einsum("bsd,dq->bsq", memory, w["cross_wv"]).reshape(
+        B, memory.shape[1], KV, hd)
+    o = chunked_attention(q, k, v, causal=False, q_chunk=cfg.attn_q_chunk)
+    return jnp.einsum("bsq,qd->bsd", o.reshape(B, S, H * hd), w["cross_wo"])
+
+
+def mlp_ffn(w, x, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, w["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, w["w_up"])
+    h = constrain(h, "data", None, "model")
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w["w_down"])
+
+
+def attn_mlp_layer(w, x, cfg: ModelConfig, positions, causal=True) -> Tuple:
+    aux = {}
+    h = norm(cfg, x, w.get("attn_norm"))
+    x = x + self_attention(w, h, cfg, positions, causal=causal,
+                           window=cfg.sliding_window)
+    x = constrain(x, "data", None, "model")
+    h = norm(cfg, x, w.get("mlp_norm"))
+    if cfg.family == "moe" and "router" in w:
+        y, aux = moe_ffn(w, h, cfg)
+    else:
+        y = mlp_ffn(w, h, cfg)
+    x = x + y
+    return constrain(x, "data", None, "model"), aux
+
+
+def mamba_layer(w, x, cfg: ModelConfig) -> jax.Array:
+    h = norm(cfg, x, w["norm"])
+    if cfg.ssm_version == 1:
+        y = mamba1_forward(w, h, cfg)
+    else:
+        y = mamba2_forward(w, h, cfg)
+    return constrain(x + y, "data", None, "model")
+
+
+# ===========================================================================
+# Forward (training)
+# ===========================================================================
+def _embed_in(params, batch, cfg: ModelConfig):
+    if "embeds" in batch:                       # vlm stub frontend
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    return constrain(x.astype(_dtype(cfg)), "data", None, "model")
+
+
+def _logits_out(params, x, cfg: ModelConfig):
+    x = norm(cfg, x, params.get("final_norm"))
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return constrain(logits, "data", None, "model")
+
+
+def _remat(fn, cfg: ModelConfig = None):
+    if cfg is not None and cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.remat(fn, policy=policy)
+    return jax.remat(fn)
+
+
+def _scan_layers(layer_fn, x, stacked_w, remat=True, unroll=False, cfg=None):
+    fn_base = _remat(layer_fn, cfg) if remat else layer_fn
+
+    def body(carry, w):
+        out = fn_base(w, carry)
+        if isinstance(out, tuple):
+            return out[0], out[1]
+        return out, None
+
+    if unroll:
+        # python-unrolled layer loop: every layer's ops appear in the HLO,
+        # so cost_analysis counts them (lax.scan bodies are counted ONCE
+        # regardless of trip count — the dry-run's L-diff extraction relies
+        # on this unrolled path; see DESIGN.md §6)
+        L = jax.tree.leaves(stacked_w)[0].shape[0]
+        for i in range(L):
+            w = jax.tree.map(lambda a: a[i], stacked_w)
+            x, _ = body(x, w)
+        return x, None
+    x, aux = jax.lax.scan(body, x, stacked_w)
+    return x, aux
+
+
+def forward(params: Params, batch: Dict, cfg: ModelConfig,
+            remat: bool = True, unroll: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits [B,S,V]."""
+    x = _embed_in(params, batch, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def layer(w, h):
+            return attn_mlp_layer(w, h, cfg, positions)
+        x, _ = _scan_layers(layer, x, params["layers"], remat, unroll, cfg)
+    elif fam == "ssm":
+        def layer(w, h):
+            return mamba_layer(w, h, cfg)
+        x, _ = _scan_layers(layer, x, params["layers"], remat, unroll, cfg)
+    elif fam == "hybrid":
+        x = _hybrid_forward(params, x, cfg, positions, remat, unroll)
+    elif fam == "encdec":
+        memory = _encode(params, batch["audio_embeds"], cfg, remat, unroll)
+
+        def layer(w, h):
+            h2, aux = attn_mlp_layer_with_cross(w, h, memory, cfg, positions)
+            return h2, aux
+        x, _ = _scan_layers(layer, x, params["layers"], remat, unroll, cfg)
+    else:
+        raise ValueError(fam)
+    return _logits_out(params, x, cfg)
+
+
+def attn_mlp_layer_with_cross(w, x, memory, cfg, positions):
+    h = norm(cfg, x, w.get("attn_norm"))
+    x = x + self_attention(w, h, cfg, positions, causal=True)
+    h = norm(cfg, x, w.get("cross_norm"))
+    x = x + cross_attention(w, h, memory, cfg)
+    h = norm(cfg, x, w.get("mlp_norm"))
+    x = x + mlp_ffn(w, h, cfg)
+    return constrain(x, "data", None, "model"), {}
+
+
+def _encode(params, audio_embeds, cfg: ModelConfig, remat=True,
+            unroll=False):
+    x = constrain(audio_embeds.astype(_dtype(cfg)), "data", None, "model")
+    positions = jnp.arange(x.shape[1])
+
+    ecfg = dataclasses.replace(cfg, family="dense", sliding_window=0)
+
+    def layer(w, h):
+        h2, _ = attn_mlp_layer(w, h, ecfg, positions, causal=False)
+        return h2
+    x, _ = _scan_layers(layer, x, params["enc_layers"], remat, unroll, cfg)
+    return norm(cfg, x, params.get("enc_final_norm"))
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig, positions, remat=True,
+                    unroll=False):
+    """Zamba2: groups of mamba2 blocks with ONE shared attention block
+    applied between groups (the shared block's params are reused)."""
+    L, every = cfg.n_layers, cfg.shared_attn_every
+    shared = params["shared"]
+    acfg = dataclasses.replace(cfg, family="dense")
+    offset = 0
+    group_sizes = []
+    while offset < L:
+        group_sizes.append(min(every, L - offset))
+        offset += every
+    start = 0
+    for g in group_sizes:
+        sl = jax.tree.map(lambda a: a[start:start + g], params["layers"])
+
+        def layer(w, h):
+            return mamba_layer(w, h, cfg)
+        x, _ = _scan_layers(layer, x, sl, remat, unroll, cfg)
+        x, _ = attn_mlp_layer(shared, x, acfg, positions)
+        start += g
+    return x
+
+
+# ===========================================================================
+# Caches / prefill / decode
+# ===========================================================================
+def _cache_seq_len(cfg: ModelConfig, max_seq: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    """ShapeDtypeStruct cache skeleton (the dry-run path)."""
+    return jax.tree.map(lambda x: x, _cache_impl(cfg, batch, max_seq,
+                                                 abstract=True))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict:
+    return _cache_impl(cfg, batch, max_seq, abstract=False)
+
+
+def _cache_impl(cfg: ModelConfig, B: int, max_seq: int, abstract: bool):
+    dt = _dtype(cfg)
+    hd, KV = cfg.head_dim, cfg.n_kv_heads
+    S = _cache_seq_len(cfg, max_seq)
+
+    def arr(shape, dtype=dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    cache: Dict[str, Any] = {"pos": arr((), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        cache["kv_k"] = arr((cfg.n_layers, B, S, KV * hd))
+        cache["kv_v"] = arr((cfg.n_layers, B, S, KV * hd))
+    elif fam == "ssm":
+        cache["conv"] = arr((cfg.n_layers, B, cfg.d_inner, cfg.ssm_conv - 1))
+        cache["ssm"] = arr((cfg.n_layers, B, cfg.d_inner, cfg.ssm_state),
+                           jnp.float32)
+    elif fam == "hybrid":
+        n_shared = (cfg.n_layers + cfg.shared_attn_every - 1) \
+            // cfg.shared_attn_every
+        cache["conv"] = arr((cfg.n_layers, B, cfg.d_inner, cfg.ssm_conv - 1))
+        nh, p = cfg.ssm_heads, cfg.d_inner // cfg.ssm_heads
+        cache["ssm"] = arr((cfg.n_layers, B, nh, p, cfg.ssm_state),
+                           jnp.float32)
+        cache["kv_k"] = arr((n_shared, B, S, KV * hd))
+        cache["kv_v"] = arr((n_shared, B, S, KV * hd))
+    elif fam == "encdec":
+        cache["kv_k"] = arr((cfg.n_layers, B, S, KV * hd))
+        cache["kv_v"] = arr((cfg.n_layers, B, S, KV * hd))
+        cache["enc_out"] = arr((B, cfg.encoder_seq, cfg.d_model))
+    return cache
+
+
+def _attn_decode_one(w, x, k_cache, v_cache, pos, cfg: ModelConfig,
+                     window: int):
+    """x: [B,1,D]; k/v_cache: [B,Sc,KV*hd] fused. Returns (out, k', v')."""
+    B = x.shape[0]
+    hd, KV, H = cfg.head_dim, cfg.n_kv_heads, cfg.n_heads
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _proj_qkv(w, x, cfg, positions)
+    Sc = k_cache.shape[1]
+    slot = jnp.where(window > 0, pos % Sc, jnp.minimum(pos, Sc - 1))
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.reshape(B, 1, KV * hd), (0, slot, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.reshape(B, 1, KV * hd), (0, slot, 0))
+    kc = k_cache.reshape(B, Sc, KV, hd)
+    vc = v_cache.reshape(B, Sc, KV, hd)
+    o = decode_attention(q, kc, vc, cache_len=pos + 1, window=window,
+                         no_repeat=cfg.decode_no_repeat)
+    o = o.reshape(B, 1, H * hd)
+    return jnp.einsum("bsq,qd->bsd", o, w["wo"]), k_cache, v_cache
+
+
+def _maybe_unrolled_scan(body, x, xs, unroll: bool):
+    """lax.scan or python-unrolled equivalent (stacked ys)."""
+    if not unroll:
+        return jax.lax.scan(body, x, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a, axis=0), *ys)
+    return x, stacked
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Dict,
+                cfg: ModelConfig, unroll: bool = False) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: [B,1] (or embeds [B,1,D]) -> logits [B,1,V]."""
+    fam = cfg.family
+    pos = cache["pos"]
+    if tokens.ndim == 3:
+        x = constrain(tokens.astype(_dtype(cfg)), "data", None, "model")
+    else:
+        x = constrain(params["embed"][tokens].astype(_dtype(cfg)),
+                      "data", None, "model")
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        window = cfg.sliding_window
+
+        def body(carry, xs):
+            h = carry
+            if fam == "encdec":
+                w, kc, vc = xs
+            else:
+                w, kc, vc = xs
+            hh = norm(cfg, h, w.get("attn_norm"))
+            attn_out, kc, vc = _attn_decode_one(w, hh, kc, vc, pos, cfg,
+                                                window)
+            h = h + attn_out
+            if fam == "encdec":
+                hh = norm(cfg, h, w.get("cross_norm"))
+                h = h + cross_attention(w, hh, cache["enc_out"], cfg)
+            hh = norm(cfg, h, w.get("mlp_norm"))
+            if fam == "moe" and "router" in w:
+                y, _ = moe_ffn(w, hh, cfg)
+            else:
+                y = mlp_ffn(w, hh, cfg)
+            return h + y, (kc, vc)
+
+        x, (ks, vs) = _maybe_unrolled_scan(
+            body, x, (params["layers"], cache["kv_k"], cache["kv_v"]),
+            unroll)
+        new_cache["kv_k"], new_cache["kv_v"] = ks, vs
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            h = carry
+            w, conv, ssm = xs
+            hh = norm(cfg, h, w["norm"])
+            y, conv, ssm = mamba1_decode(w, hh, conv, ssm, cfg)
+            return h + y, (conv, ssm)
+        x, (convs, ssms) = _maybe_unrolled_scan(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]), unroll)
+        new_cache["conv"], new_cache["ssm"] = convs, ssms
+
+    elif fam == "hybrid":
+        x, new_cache = _hybrid_decode(params, x, cache, cfg, unroll)
+
+    new_cache["pos"] = pos + 1
+    return _logits_out(params, x, cfg), new_cache
+
+
+def _hybrid_decode(params, x, cache, cfg: ModelConfig, unroll=False):
+    pos = cache["pos"]
+    every = cfg.shared_attn_every
+    L = cfg.n_layers
+    shared = params["shared"]
+    acfg = dataclasses.replace(cfg, family="dense")
+    new_cache = dict(cache)
+    convs, ssms = [], []
+    kks, vvs = [], []
+    start = 0
+    g_idx = 0
+    while start < L:
+        g = min(every, L - start)
+        sl = jax.tree.map(lambda a: a[start:start + g], params["layers"])
+        cv = cache["conv"][start:start + g]
+        sm = cache["ssm"][start:start + g]
+
+        def body(carry, xs):
+            h = carry
+            w, conv, ssm = xs
+            hh = norm(cfg, h, w["norm"])
+            y, conv, ssm = mamba2_decode(w, hh, conv, ssm, cfg)
+            return h + y, (conv, ssm)
+        x, (cv2, sm2) = _maybe_unrolled_scan(body, x, (sl, cv, sm), unroll)
+        convs.append(cv2)
+        ssms.append(sm2)
+        # shared attention block
+        hh = norm(acfg, x, shared.get("attn_norm"))
+        attn_out, kc, vc = _attn_decode_one(
+            shared, hh, cache["kv_k"][g_idx], cache["kv_v"][g_idx], pos,
+            acfg, cfg.sliding_window)
+        x = x + attn_out
+        hh = norm(acfg, x, shared.get("mlp_norm"))
+        x = x + mlp_ffn(shared, hh, acfg)
+        kks.append(kc)
+        vvs.append(vc)
+        start += g
+        g_idx += 1
+    new_cache["conv"] = jnp.concatenate(convs, axis=0)
+    new_cache["ssm"] = jnp.concatenate(ssms, axis=0)
+    new_cache["kv_k"] = jnp.stack(kks, axis=0)
+    new_cache["kv_v"] = jnp.stack(vvs, axis=0)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+def prefill(params: Params, batch: Dict, cache: Dict,
+            cfg: ModelConfig, unroll: bool = False) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, fill the cache, return last-position logits."""
+    fam = cfg.family
+    x = _embed_in(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    new_cache = dict(cache)
+    Sc = new_cache["kv_k"].shape[2] if "kv_k" in new_cache else 0
+
+    def kv_into_cache(k, v):
+        """k,v: [B,S,KV,hd] -> cache layout [B,Sc,KV*hd] (keep last Sc).
+
+        Ring invariant: position p lives at slot p % Sc, so subsequent
+        decode writes (slot = pos % Sc) evict exactly the token that falls
+        out of the window."""
+        KVhd = cfg.n_kv_heads * cfg.head_dim
+        kf = k.reshape(B, S, KVhd)
+        vf = v.reshape(B, S, KVhd)
+        if S >= Sc:
+            kf, vf = kf[:, S - Sc:], vf[:, S - Sc:]
+            shift = (S - Sc) % Sc
+            if shift:
+                kf = jnp.roll(kf, shift, axis=1)
+                vf = jnp.roll(vf, shift, axis=1)
+            return kf, vf
+        pad = Sc - S
+        return (jnp.pad(kf, ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(vf, ((0, 0), (0, pad), (0, 0))))
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        memory = None
+        if fam == "encdec":
+            memory = _encode(params, batch["audio_embeds"], cfg,
+                             unroll=unroll)
+            new_cache["enc_out"] = memory
+
+        def body(carry, w):
+            h = carry
+            hh = norm(cfg, h, w.get("attn_norm"))
+            q, k, v = _proj_qkv(w, hh, cfg, positions)
+            o = chunked_attention(q, k, v, causal=True,
+                                  window=cfg.sliding_window,
+                                  q_chunk=cfg.attn_q_chunk)
+            o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+            h = h + jnp.einsum("bsq,qd->bsd", o, w["wo"])
+            if fam == "encdec":
+                hh = norm(cfg, h, w.get("cross_norm"))
+                h = h + cross_attention(w, hh, memory, cfg)
+            hh = norm(cfg, h, w.get("mlp_norm"))
+            if fam == "moe" and "router" in w:
+                y, _ = moe_ffn(w, hh, cfg)
+            else:
+                y = mlp_ffn(w, hh, cfg)
+            kc, vc = kv_into_cache(k, v)
+            return h + y, (kc, vc)
+
+        x, (ks, vs) = _maybe_unrolled_scan(body, x, params["layers"], unroll)
+        new_cache["kv_k"], new_cache["kv_v"] = ks, vs
+
+    elif fam == "ssm":
+        # run full forward then recompute final states chunk-free: we reuse
+        # the decode recurrence once per layer on the last conv window and
+        # rely on chunked_diag_scan's final state inside mamba1_prefill.
+        x, convs, ssms = _ssm_prefill(params, x, cfg, unroll)
+        new_cache["conv"], new_cache["ssm"] = convs, ssms
+
+    elif fam == "hybrid":
+        x, new_cache = _hybrid_prefill(params, x, cache, cfg, positions,
+                                       kv_into_cache, unroll)
+
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    logits = _logits_out(params, x[:, -1:], cfg)
+    return logits, new_cache
+
+
+def _ssm_prefill(params, x, cfg: ModelConfig, unroll=False):
+    from .ssm import chunked_diag_scan, _causal_conv, _softplus
+
+    def body(carry, w):
+        h = carry
+        hh = norm(cfg, h, w["norm"])
+        B, S, D = hh.shape
+        dI, N = cfg.d_inner, cfg.ssm_state
+        xz = jnp.einsum("bsd,de->bse", hh, w["in_proj"])
+        xs, z = jnp.split(xz, 2, axis=-1)
+        conv_tail = jnp.swapaxes(xs[:, -(cfg.ssm_conv - 1):], 1, 2)
+        xs = _causal_conv(xs, w["conv_w"], w["conv_b"], cfg.ssm_conv)
+        xs = jax.nn.silu(xs)
+        proj = jnp.einsum("bse,er->bsr", xs, w["x_proj"])
+        R = w["dt_proj"].shape[0]
+        dt, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+        dt = _softplus(jnp.einsum("bsr,re->bse", dt, w["dt_proj"])
+                       + w["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(w["a_log"].astype(jnp.float32))
+        log_a = dt[..., None] * A
+        b_in = (dt[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+                * xs.astype(jnp.float32)[..., None])
+        h0 = jnp.zeros((B, dI, N), jnp.float32)
+        h_all, h_last = chunked_diag_scan(log_a, b_in, h0)
+        y = jnp.einsum("bsen,bsn->bse", h_all.astype(jnp.float32),
+                       Cc.astype(jnp.float32))
+        y = y + w["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(h.dtype)
+        out = jnp.einsum("bse,ed->bsd", y, w["out_proj"])
+        return h + out, (conv_tail, h_last.astype(jnp.float32))
+
+    x, (convs, ssms) = _maybe_unrolled_scan(body, x, params["layers"],
+                                            unroll)
+    return x, convs, ssms
+
+
+def _hybrid_prefill(params, x, cache, cfg: ModelConfig, positions,
+                    kv_into_cache, unroll=False):
+    """Mamba2 groups + shared attention, filling the shared block's caches."""
+    B, S, _ = x.shape
+    every, L = cfg.shared_attn_every, cfg.n_layers
+    shared = params["shared"]
+    acfg = dataclasses.replace(cfg, family="dense")
+    new_cache = dict(cache)
+    convs, ssms, kks, vvs = [], [], [], []
+    start = 0
+    while start < L:
+        g = min(every, L - start)
+        sl = jax.tree.map(lambda a: a[start:start + g], params["layers"])
+
+        def body(carry, w):
+            h = carry
+            hh = norm(cfg, h, w["norm"])
+            y, conv_tail, hs = mamba2_forward(w, hh, cfg, return_state=True)
+            return h + y, (conv_tail, hs)
+        x, (cv, sm) = _maybe_unrolled_scan(body, x, sl, unroll)
+        convs.append(cv)
+        ssms.append(sm)
+        hh = norm(acfg, x, shared.get("attn_norm"))
+        q, k, v = _proj_qkv(shared, hh, acfg, positions)
+        o = chunked_attention(q, k, v, causal=True,
+                              window=cfg.sliding_window,
+                              q_chunk=cfg.attn_q_chunk)
+        o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        x = x + jnp.einsum("bsq,qd->bsd", o, shared["wo"])
+        hh = norm(acfg, x, shared.get("mlp_norm"))
+        x = x + mlp_ffn(shared, hh, acfg)
+        kc, vc = kv_into_cache(k, v)
+        kks.append(kc)
+        vvs.append(vc)
+        start += g
+    new_cache["conv"] = jnp.concatenate(convs, axis=0)
+    new_cache["ssm"] = jnp.concatenate(ssms, axis=0)
+    new_cache["kv_k"] = jnp.stack(kks, axis=0)
+    new_cache["kv_v"] = jnp.stack(vvs, axis=0)
+    return x, new_cache

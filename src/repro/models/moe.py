@@ -1,0 +1,84 @@
+"""Mixture-of-Experts FFN with capacity-buffer dispatch.
+
+Flop-correct TPU formulation (GSPMD/MaxText style): tokens are counting-
+sorted into per-expert capacity buffers via cumsum ranking + scatter, each
+expert runs a dense FFN over its buffer, and results are gathered back with
+the router weights.  HLO FLOPs therefore scale with *active* parameters
+(top-k x capacity-factor), not with the full expert count — which is what
+the roofline's MODEL_FLOPS = 6*N_active*D expects.
+
+Experts shard over the 'model' axis when the count divides (granite: 32
+experts / 16-way TP = EP); otherwise the expert matrices TP-shard internally
+(mixtral: 8 experts on 16-way falls back, see sharding.py).
+Tokens overflowing an expert's capacity are dropped (standard behaviour;
+the router aux loss keeps the load balanced).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardctx import axis_size, constrain
+from .config import ModelConfig
+
+def moe_ffn(w: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """x: [B,S,D] -> (y [B,S,D], metrics)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = max(int(T * K * cfg.moe_capacity_factor / E + 0.999), 1)
+
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt, w["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # [T,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9)                    # renormalize
+
+    # ---- counting-sort slot assignment --------------------------------
+    flat_expert = expert_idx.reshape(-1)                      # [T*K]
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # [T*K,E]
+    # prefix sum via associative_scan: log-depth dense adds.  jnp.cumsum
+    # lowers to reduce-window, which XLA cost analysis bills at
+    # O(n * window) — a ~50x phantom-FLOP inflation at n = T*K (measured;
+    # EXPERIMENTS.md §Dry-run notes).
+    csum = jax.lax.associative_scan(jnp.add, onehot, axis=0)
+    slot_in_expert = csum - onehot                            # rank per expert
+    slot = jnp.sum(slot_in_expert * onehot, axis=-1)          # [T*K]
+    keep = slot < C
+    slot = jnp.where(keep, slot, C - 1)
+
+    # ---- scatter tokens into expert buffers ---------------------------
+    src = jnp.repeat(xt, K, axis=0)                           # [T*K,D]
+    src = jnp.where(keep[:, None], src, 0.0)
+    buffers = jnp.zeros((E, C, D), x.dtype)
+    buffers = buffers.at[flat_expert, slot].add(src)
+    # EP when the expert count divides TP (granite: 32/16); otherwise TP
+    # inside the expert matmuls (mixtral: 8 experts on 16-way model axis)
+    ep = E % max(axis_size("model"), 1) == 0
+    buffers = constrain(buffers, "model" if ep else None, None,
+                        None if ep else "model")
+
+    # ---- expert FFN (silu gate) ----------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", buffers, w["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buffers, w["we_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, "model" if ep else None, None, None if ep else "model")
+    out = jnp.einsum("ecf,efd->ecd", h, w["we_down"])
+
+    # ---- gather back + weighted combine --------------------------------
+    gathered = out[flat_expert, slot]                         # [T*K,D]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    y = (gathered.reshape(T, K, D)
+         * gate_vals.astype(x.dtype)[..., None]).sum(axis=1)
+
+    # ---- router aux (load-balancing) loss ------------------------------
+    density = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32),
+                       axis=(0, 1))                           # fraction routed
+    prob_mass = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(density * prob_mass)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(B, S, D), {"moe_aux_loss": aux_loss,
+                                "moe_drop_fraction": dropped}

@@ -1,0 +1,246 @@
+"""Selective state-space layers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+TPU adaptation (DESIGN.md §3): instead of the CUDA selective-scan kernel we
+use a *chunked log-space cumsum* formulation for the diagonal recurrence —
+all dense jnp ops (cumsum/exp/einsum), no opaque `while` loops in the hot
+path, so HLO cost analysis counts every FLOP and the working set is bounded
+by the chunk, not the sequence.
+
+Mamba-2 uses the SSD matmul form: scalar decay per head turns the
+within-chunk recurrence into (C B^T ⊙ decay-mask) @ x — MXU-friendly.
+
+Recurrence (diagonal):  h_t = a_t ⊙ h_{t-1} + b_t,  a_t = exp(Δ_t A) ∈ (0,1)
+Within a chunk with cumulative logs La_t = Σ_{i<=t} log a_i:
+    h_t = exp(La_t) ⊙ (h_0 + Σ_{i<=t} exp(-La_i) b_i)
+Stable for chunk-bounded |La| (chunks of 256 with Δ·A in (-Δmax·|A|, 0)).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardctx import constrain
+from .config import ModelConfig
+
+def _chunk_for(S: int) -> int:
+    """Mamba-1 chunk size (linear in chunk): bounded block count keeps the
+    unrolled-HLO size (and XLA CPU compile time) manageable at 32k+
+    sequence lengths while the working set stays VMEM/HBM-friendly."""
+    return max(256, S // 8)
+
+
+def _chunk_for_ssd(S: int) -> int:
+    """Mamba-2 (SSD) chunk: the within-chunk decay mask is (c x c) —
+    quadratic — so cap the chunk at 1024 and the block count at ~32."""
+    return max(256, min(1024, S // 16))
+
+
+# ---------------------------------------------------------------------------
+# Chunked diagonal scan (shared by mamba1 full-state and mamba2 state pass)
+# ---------------------------------------------------------------------------
+def chunked_diag_scan(log_a: jax.Array, b: jax.Array,
+                      h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """log_a, b: [B, S, ...] (elementwise recurrence along S); h0: [B, ...].
+
+    Returns (h_all [B,S,...], h_final [B,...]).  Within-chunk recurrence uses
+    ``jax.lax.associative_scan`` on (a, b) transform pairs — log-depth dense
+    ops (counted by HLO cost analysis, unlike a `while` body) and numerically
+    safe: products of a in (0,1) underflow to 0 instead of overflowing the
+    way the naive exp(-cumsum) rescaling does.  The chunk loop itself is
+    python-unrolled so the working set is CHUNK-bounded.
+    """
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    B, S = log_a.shape[:2]
+    CHUNK = _chunk_for(S)
+    chunks = []
+    h = h0.astype(jnp.float32)
+    for s0 in range(0, S, CHUNK):
+        a = jnp.exp(log_a[:, s0:s0 + CHUNK].astype(jnp.float32))
+        bb = b[:, s0:s0 + CHUNK].astype(jnp.float32)
+        a_acc, b_acc = jax.lax.associative_scan(combine, (a, bb), axis=1)
+        h_t = a_acc * h[:, None] + b_acc
+        chunks.append(h_t.astype(b.dtype))
+        h = h_t[:, -1]
+    return jnp.concatenate(chunks, axis=1), h.astype(b.dtype)
+
+
+def _softplus(x):
+    return jax.nn.softplus(x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+def mamba1_forward(w: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence mamba1 block. x: [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    dI, N = cfg.d_inner, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])      # [B,S,2dI]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "data", None, "model")
+
+    xs = _causal_conv(xs, w["conv_w"], w["conv_b"], cfg.ssm_conv)
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("bse,er->bsr", xs, w["x_proj"])    # [B,S,R+2N]
+    dt_rank = w["dt_proj"].shape[0]
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = _softplus(jnp.einsum("bsr,re->bse", dt, w["dt_proj"])
+                   + w["dt_bias"].astype(jnp.float32))   # [B,S,dI] f32
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))         # [dI,N] negative
+    log_a = dt[..., None] * A                            # [B,S,dI,N]
+    b_in = (dt[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+            * xs.astype(jnp.float32)[..., None])         # [B,S,dI,N]
+    h0 = jnp.zeros((B, dI, N), jnp.float32)
+    h_all, _ = chunked_diag_scan(log_a, b_in, h0)        # [B,S,dI,N]
+    y = jnp.einsum("bsen,bsn->bse", h_all.astype(jnp.float32),
+                   Cc.astype(jnp.float32))
+    y = y + w["d_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "data", None, "model")
+    return jnp.einsum("bse,ed->bsd", y, w["out_proj"])
+
+
+def mamba1_decode(w: Dict, x: jax.Array, conv_state: jax.Array,
+                  ssm_state: jax.Array, cfg: ModelConfig):
+    """Single-token step. x: [B,1,D]; conv_state: [B,dI,K-1];
+    ssm_state: [B,dI,N] -> (y [B,1,D], new_conv, new_ssm)."""
+    B = x.shape[0]
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                    # [B,1,dI]
+    xs1 = xs[:, 0]                                       # [B,dI]
+    window = jnp.concatenate([conv_state, xs1[..., None]], axis=-1)  # [B,dI,K]
+    xc = jnp.einsum("bek,ek->be", window, w["conv_w"]) + w["conv_b"]
+    new_conv = window[..., 1:]
+    xc = jax.nn.silu(xc)                                 # [B,dI]
+
+    proj = jnp.einsum("be,er->br", xc, w["x_proj"])
+    dt_rank = w["dt_proj"].shape[0]
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = _softplus(jnp.einsum("br,re->be", dt, w["dt_proj"]) + w["dt_bias"])
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None] * A)                       # [B,dI,N]
+    b_in = dt[..., None] * Bc.astype(jnp.float32)[:, None, :] \
+        * xc.astype(jnp.float32)[..., None]
+    h = a * ssm_state.astype(jnp.float32) + b_in
+    y = jnp.einsum("ben,bn->be", h, Cc.astype(jnp.float32))
+    y = y + w["d_skip"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, w["out_proj"])[:, None]
+    return out, new_conv, h.astype(ssm_state.dtype)
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+                 k: int) -> jax.Array:
+    """Depthwise causal conv along S. x: [B,S,dI], conv_w: [dI,K]."""
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for i in range(k):
+        out = out + pad[:, i:i + S].astype(jnp.float32) * \
+            conv_w[:, i].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (zamba2): SSD with scalar decay per head
+# ---------------------------------------------------------------------------
+def mamba2_forward(w: Dict, x: jax.Array, cfg: ModelConfig,
+                   return_state: bool = False):
+    """x: [B,S,D] -> [B,S,D] (optionally also final conv/ssm states)."""
+    B, S, D = x.shape
+    dI, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = dI // nh
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = jnp.swapaxes(xs[:, -(cfg.ssm_conv - 1):], 1, 2)  # [B,dI,K-1]
+    xs = _causal_conv(xs, w["conv_w"], w["conv_b"], cfg.ssm_conv)
+    xs = jax.nn.silu(xs)
+    xs = constrain(xs, "data", None, "model")
+
+    bc = jnp.einsum("bsd,dn->bsn", x, w["bc_proj"])      # [B,S,2N]
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt = _softplus(jnp.einsum("bsd,dh->bsh", x, w["dt_proj"])
+                   + w["dt_bias"].astype(jnp.float32))   # [B,S,nh]
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))         # [nh]
+    log_a = dt * A                                       # [B,S,nh]
+
+    xh = xs.reshape(B, S, nh, p).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    ys = []
+    CHUNK = _chunk_for_ssd(S)
+    h = jnp.zeros((B, nh, p, N), jnp.float32)
+    for s0 in range(0, S, CHUNK):
+        c = slice(s0, s0 + CHUNK)
+        la = log_a[:, c]                                 # [B,c,nh]
+        # associative_scan, not cumsum: see moe.py (cost-analysis billing)
+        lacc = jax.lax.associative_scan(jnp.add, la, axis=1)
+        xc = xh[:, c]                                    # [B,c,nh,p]
+        Bcc, Ccc = Bf[:, c], Cf[:, c]                    # [B,c,N]
+        L = lacc[:, :, None, :] - lacc[:, None, :, :]    # [B,q,k,nh]
+        ck = s0 + CHUNK - s0
+        mask = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        G = jnp.einsum("bqn,bkn->bqk", Ccc, Bcc)[..., None] * \
+            jnp.where(mask[None, ..., None], jnp.exp(L), 0.0)  # [B,q,k,nh]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp",
+                             G * (dt[:, c][:, None, :, :]), xc)
+        # inter-chunk: contribution of carried state h
+        y_inter = jnp.einsum("bqn,bhpn->bqhp",
+                             Ccc, h) * jnp.exp(lacc)[..., None]
+        ys.append((y_intra + y_inter).astype(x.dtype))
+        # update carried state
+        tail = jnp.exp(lacc[:, -1:] - lacc)              # [B,c,nh]
+        dB = (dt[:, c] * tail)[..., None] * Bcc[:, :, None, :]  # [B,c,nh,N]
+        h = h * jnp.exp(lacc[:, -1])[..., None, None] + \
+            jnp.einsum("bchn,bchp->bhpn", dB, xc)
+    y = jnp.concatenate(ys, axis=1)                      # [B,S,nh,p]
+    y = y.astype(jnp.float32) + \
+        w["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, dI)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "data", None, "model")
+    out = jnp.einsum("bse,ed->bsd", y, w["out_proj"])
+    if return_state:
+        return out, conv_tail, h
+    return out
+
+
+def mamba2_decode(w: Dict, x: jax.Array, conv_state: jax.Array,
+                  ssm_state: jax.Array, cfg: ModelConfig):
+    """x: [B,1,D]; conv_state: [B,dI,K-1]; ssm_state: [B,nh,p,N]."""
+    B = x.shape[0]
+    dI, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = dI // nh
+    xz = jnp.einsum("bsd,de->bse", x, w["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs1 = xs[:, 0]
+    window = jnp.concatenate([conv_state, xs1[..., None]], axis=-1)
+    xc = jnp.einsum("bek,ek->be", window, w["conv_w"]) + w["conv_b"]
+    new_conv = window[..., 1:]
+    xc = jax.nn.silu(xc)
+
+    bc = jnp.einsum("bd,dn->bn", x[:, 0], w["bc_proj"])
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt = _softplus(jnp.einsum("bd,dh->bh", x[:, 0], w["dt_proj"])
+                   + w["dt_bias"])                        # [B,nh]
+    A = -jnp.exp(w["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                   # [B,nh]
+    xhead = xc.reshape(B, nh, p).astype(jnp.float32)
+    dB = dt[..., None] * Bc.astype(jnp.float32)[:, None, :]   # [B,nh,N]
+    h = ssm_state.astype(jnp.float32) * a[..., None, None] + \
+        xhead[..., None] * dB[:, :, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc.astype(jnp.float32))
+    y = y + w["d_skip"].astype(jnp.float32)[None, :, None] * xhead
+    y = y.reshape(B, dI)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, w["out_proj"])[:, None]
+    return out, new_conv, h.astype(ssm_state.dtype)

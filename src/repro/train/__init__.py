@@ -1,0 +1,7 @@
+"""Training/serving steps + fault-tolerant loop."""
+from .steps import (build_decode_step, build_prefill, build_train_step,
+                    cross_entropy_loss)
+from .loop import TrainLoop
+
+__all__ = ["build_train_step", "build_prefill", "build_decode_step",
+           "cross_entropy_loss", "TrainLoop"]

@@ -1,0 +1,88 @@
+"""jit-able train / prefill / decode steps.
+
+``build_train_step`` returns a pure (params, opt_state, batch, step) ->
+(params, opt_state, metrics) function: forward (scan+remat), chunked-vocab
+cross entropy, AdamW, LR schedule.  The caller jits it with in/out
+shardings (see launch/dryrun.py and launch/train.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.shardctx import constrain
+from ..models import model as M
+from ..models.config import ModelConfig
+from ..optim import adamw_update, linear_warmup_cosine
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab_chunk: int = 0) -> jax.Array:
+    """Mean next-token CE.  logits [B,S,V] f32-upcast internally.
+
+    ``vocab_chunk`` > 0 computes the logsumexp blockwise over the vocab to
+    bound the f32 logits working set (beyond-paper §Perf lever); 0 uses the
+    straightforward full-vocab form (baseline).
+    """
+    if vocab_chunk and vocab_chunk < logits.shape[-1]:
+        v = logits.shape[-1]
+        m = jnp.full(logits.shape[:-1], -jnp.inf, jnp.float32)
+        s = jnp.zeros(logits.shape[:-1], jnp.float32)
+        for c0 in range(0, v, vocab_chunk):
+            blk = logits[..., c0:c0 + vocab_chunk].astype(jnp.float32)
+            bm = jnp.max(blk, axis=-1)
+            m2 = jnp.maximum(m, bm)
+            s = s * jnp.exp(m - m2) + jnp.sum(jnp.exp(blk - m2[..., None]),
+                                              axis=-1)
+            m = m2
+        lse = m + jnp.log(s)
+    else:
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None],
+                              axis=-1)[..., 0].astype(jnp.float32)
+    return jnp.mean(lse - tgt)
+
+
+def _loss_fn(params, batch: Dict, cfg: ModelConfig, vocab_chunk: int = 0,
+             remat: bool = True):
+    logits = M.forward(params, batch, cfg, remat=remat)
+    labels = batch.get("labels")
+    if labels is None:
+        # next-token objective on the input stream
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+    loss = cross_entropy_loss(logits, labels, vocab_chunk)
+    aux = {"loss": loss}
+    return loss, aux
+
+
+def build_train_step(cfg: ModelConfig, base_lr: float = 3e-4,
+                     warmup_steps: int = 100, total_steps: int = 10_000,
+                     vocab_chunk: int = 0, remat: bool = True) -> Callable:
+    """Returns train_step(params, opt_state, batch, step)."""
+
+    def train_step(params, opt_state, batch, step):
+        (loss, aux), grads = jax.value_and_grad(
+            functools.partial(_loss_fn, batch=batch, cfg=cfg,
+                              vocab_chunk=vocab_chunk, remat=remat),
+            has_aux=True)(params)
+        lr = linear_warmup_cosine(step, base_lr, warmup_steps, total_steps)
+        params, opt_state, om = adamw_update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch, cache):
+        return M.prefill(params, batch, cache, cfg)
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, tokens, cache):
+        return M.decode_step(params, tokens, cache, cfg)
+    return decode_step

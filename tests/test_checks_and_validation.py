@@ -1,0 +1,184 @@
+"""Design checks (Sec. 3.2) + nine-chip validation (Sec. 5) + use-cases (Sec. 6)."""
+import pytest
+
+from repro.core import (ActivePixelSensor, AnalogArray,
+                        AnalogToDigitalConverter, ComputeUnit,
+                        DesignCheckError, Domain, HWConfig, LineBuffer,
+                        Mapping, PixelInput, ProcessStage, SwitchedCapacitorMAC,
+                        estimate_energy, run_design_checks, topological_order)
+from repro.core.chips import chip_ids, validate_all
+from repro.core.usecases import run_study
+from repro.core.usecases.study import find_row
+
+
+# ---------------------------------------------------------------------------
+# Design checks
+# ---------------------------------------------------------------------------
+def test_dag_cycle_detected():
+    a = ProcessStage(name="a", input_size=(4, 4), output_size=(4, 4))
+    b = ProcessStage(name="b", input_size=(4, 4), output_size=(4, 4))
+    a.set_input_stage(b)
+    b.set_input_stage(a)
+    with pytest.raises(ValueError, match="cycle"):
+        topological_order([a, b])
+
+
+def test_geometry_mismatch_detected():
+    px = PixelInput(name="pixels", output_size=(8, 8))
+    bad = ProcessStage(name="bad", input_size=(8, 8), kernel_size=(3, 3),
+                       stride=(1, 1), output_size=(8, 8))  # should be 6x6
+    bad.set_input_stage(px)
+    hw = HWConfig()
+    hw.add_analog_array(AnalogArray(name="pixel_array", num_components=64,
+                                    component=ActivePixelSensor()))
+    mapping = Mapping({"pixels": "pixel_array", "bad": "pixel_array"})
+    with pytest.raises(ValueError, match="stencil"):
+        run_design_checks(hw, [px, bad], mapping)
+
+
+def test_missing_adc_between_domains():
+    px = PixelInput(name="pixels", output_size=(8, 8))
+    dig = ProcessStage(name="dig", input_size=(8, 8), kernel_size=(1, 1),
+                       stride=(1, 1), output_size=(8, 8))
+    dig.set_input_stage(px)
+    hw = HWConfig()
+    hw.add_analog_array(AnalogArray(name="pixel_array", num_components=64,
+                                    component=ActivePixelSensor()))
+    hw.add_compute(ComputeUnit(name="proc", energy_per_cycle=1e-12))
+    mapping = Mapping({"pixels": "pixel_array", "dig": "proc"})
+    with pytest.raises(DesignCheckError, match="ADC"):
+        run_design_checks(hw, [px, dig], mapping)
+
+
+def test_analog_domain_mismatch():
+    hw = HWConfig()
+    hw.add_analog_array(AnalogArray(name="pixel_array", num_components=64,
+                                    component=ActivePixelSensor()))
+    # a charge-domain consumer after a voltage producer is fine (implicit),
+    # but TIME domain after VOLTAGE requires an explicit converter... build
+    # the reverse: TIME-output feeding a VOLTAGE-only SC MAC is implicit-
+    # incompatible
+    from repro.core.acomponent import CurrentMirrorMAC
+    hw.add_analog_array(AnalogArray(name="cm", num_components=8,
+                                    component=CurrentMirrorMAC()))
+    hw.analog_arrays[1].input_domain = Domain.TIME
+    hw2 = HWConfig()
+    hw2.add_analog_array(hw.analog_arrays[1])   # TIME input first
+    hw2.add_analog_array(AnalogArray(name="sc", num_components=8,
+                                     component=SwitchedCapacitorMAC()))
+    # CURRENT -> VOLTAGE is implicit; TIME -> VOLTAGE via current mirror out
+    # is CURRENT, fine.  Force a mismatch explicitly:
+    hw2.analog_arrays[1].input_domain = Domain.DIGITAL
+    px = PixelInput(name="pixels", output_size=(2, 4))
+    mapping = Mapping({"pixels": "cm"})
+    with pytest.raises(DesignCheckError, match="domain mismatch"):
+        run_design_checks(hw2, [px], mapping)
+
+
+def test_unmapped_stage_rejected():
+    px = PixelInput(name="pixels", output_size=(4, 4))
+    hw = HWConfig()
+    hw.add_analog_array(AnalogArray(name="pixel_array", num_components=16,
+                                    component=ActivePixelSensor()))
+    with pytest.raises(KeyError):
+        run_design_checks(hw, [px], Mapping({}))
+
+
+# ---------------------------------------------------------------------------
+# Nine-chip validation (the paper's headline numbers: MAPE 7.5 %, r=0.9999)
+# ---------------------------------------------------------------------------
+def test_validation_mape_and_pearson():
+    r = validate_all()
+    assert len(r["rows"]) == 9
+    assert r["mape"] < 0.15, f"MAPE {r['mape']:.3f} exceeds 15%"
+    assert r["pearson"] > 0.995
+    for row in r["rows"]:
+        assert row["error"] < 0.30, (row["chip"], row["error"])
+
+
+def test_all_chips_have_positive_breakdowns():
+    r = validate_all()
+    for row in r["rows"]:
+        assert all(v >= 0 for v in row["breakdown"].values()), row["chip"]
+        assert row["estimated_pj"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Use-cases: the paper's three findings
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def rhythmic_rows():
+    return run_study("rhythmic")
+
+
+@pytest.fixture(scope="module")
+def edgaze_rows():
+    return run_study("edgaze")
+
+
+def test_finding1_rhythmic_in_beats_off(rhythmic_rows):
+    """Communication-dominant: in-sensor wins, more at finer CIS nodes."""
+    for node in (130, 65):
+        r_in = find_row(rhythmic_rows, "2d_in", node)
+        r_off = find_row(rhythmic_rows, "2d_off", node)
+        assert r_in["total_uj"] < r_off["total_uj"], node
+    save130 = 1 - find_row(rhythmic_rows, "2d_in", 130)["total_uj"] / \
+        find_row(rhythmic_rows, "2d_off", 130)["total_uj"]
+    save65 = 1 - find_row(rhythmic_rows, "2d_in", 65)["total_uj"] / \
+        find_row(rhythmic_rows, "2d_off", 65)["total_uj"]
+    assert save65 > save130
+
+
+def test_finding1_edgaze_in_loses_to_off(edgaze_rows):
+    """Compute-dominant: in-sensor processing costs more than off."""
+    for node in (130, 65):
+        assert find_row(edgaze_rows, "2d_in", node)["total_uj"] > \
+            find_row(edgaze_rows, "2d_off", node)["total_uj"]
+
+
+def test_edgaze_65nm_leakage_flip(edgaze_rows):
+    """65 nm 2D-In > 130 nm 2D-In because of SRAM leakage (Sec. 6.1)."""
+    assert find_row(edgaze_rows, "2d_in", 65)["total_uj"] > \
+        find_row(edgaze_rows, "2d_in", 130)["total_uj"]
+
+
+def test_finding2_3d_beats_2d_in(edgaze_rows, rhythmic_rows):
+    for rows, nodes in ((edgaze_rows, (130, 65)), (rhythmic_rows, (130, 65))):
+        for node in nodes:
+            assert find_row(rows, "3d_in", node)["total_uj"] < \
+                find_row(rows, "2d_in", node)["total_uj"], node
+
+
+def test_finding2_stt_reduces_3d(edgaze_rows):
+    for node in (130, 65):
+        assert find_row(edgaze_rows, "3d_in_stt", node)["total_uj"] < \
+            find_row(edgaze_rows, "3d_in", node)["total_uj"]
+
+
+def test_finding2_power_density(edgaze_rows):
+    """Stacking raises power density vs 2D off-loading; 65 nm 2D-In is the
+    leakage-driven outlier (Tbl. 3 pattern)."""
+    off = find_row(edgaze_rows, "2d_off", 130)
+    tdi = find_row(edgaze_rows, "3d_in", 130)
+    assert tdi["density_mw_mm2"] > off["density_mw_mm2"]
+    in65 = find_row(edgaze_rows, "2d_in", 65)
+    assert in65["density_mw_mm2"] > tdi["density_mw_mm2"]
+
+
+def test_finding3_mixed_signal_saves(edgaze_rows):
+    """Analog S1/S2 cuts total energy, mostly via memory (Figs 11-13)."""
+    for node in (130, 65):
+        mixed = find_row(edgaze_rows, "2d_in_mixed", node)
+        digital = find_row(edgaze_rows, "2d_in", node)
+        assert mixed["total_uj"] < digital["total_uj"], node
+        # memory is the dominant source of the saving
+        mem_saving = digital["breakdown_uj"].get("MEM-D", 0) - \
+            mixed["breakdown_uj"].get("MEM-D", 0)
+        total_saving = digital["total_uj"] - mixed["total_uj"]
+        assert mem_saving > 0.5 * total_saving, node
+    # the 65 nm saving is larger (leaky SRAM replaced by analog buffers)
+    s65 = 1 - find_row(edgaze_rows, "2d_in_mixed", 65)["total_uj"] / \
+        find_row(edgaze_rows, "2d_in", 65)["total_uj"]
+    s130 = 1 - find_row(edgaze_rows, "2d_in_mixed", 130)["total_uj"] / \
+        find_row(edgaze_rows, "2d_in", 130)["total_uj"]
+    assert s65 > s130

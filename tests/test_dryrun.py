@@ -1,0 +1,89 @@
+"""Dry-run harness tests: cell matrix, skip rules, input specs, and one
+real lower+compile on the production mesh (subprocess — the 512-device
+XLA flag must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import SHAPES, all_cells, cell_skip_reason
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_cell_matrix_is_40():
+    cells = all_cells()
+    assert len(cells) == 40          # 10 archs x 4 shapes
+
+
+def test_long500k_skips_exactly_the_full_attention_archs():
+    skipped = {arch for arch, shape, skip in all_cells()
+               if shape.name == "long_500k" and skip}
+    assert skipped == {"llava_next_34b", "whisper_medium", "olmo_1b",
+                       "qwen2_5_32b", "qwen2_7b", "qwen3_4b",
+                       "granite_moe_1b_a400m"}
+    runnable = {arch for arch, shape, skip in all_cells()
+                if shape.name == "long_500k" and not skip}
+    assert runnable == {"falcon_mamba_7b", "mixtral_8x7b", "zamba2_1p2b"}
+
+
+def test_no_other_cell_skipped():
+    for arch, shape, skip in all_cells():
+        if shape.name != "long_500k":
+            assert skip is None, (arch, shape.name)
+
+
+def test_input_specs_are_abstract():
+    from repro.launch.dryrun import input_specs
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            spec = input_specs(cfg, shape)
+            for v in spec.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+            if shape.kind == "decode":
+                assert spec["tokens"].shape[0] == shape.global_batch
+            elif cfg.family == "vlm":
+                assert spec["embeds"].shape[:2] == (shape.global_batch,
+                                                    shape.seq_len)
+            else:
+                assert spec["tokens"].shape == (shape.global_batch,
+                                                shape.seq_len)
+
+
+def test_shape_contract():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"       # serve_step, not train
+    assert SHAPES["long_500k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles_on_production_mesh():
+    """End-to-end: one cheap cell lowers + compiles on the 16x16 mesh in a
+    fresh process (proves deliverable (e) machinery works from a clean env).
+    """
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "r.json")
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "olmo_1b", "--shape", "decode_32k", "--mesh", "single",
+             "--no-costs", "--out", out],
+            env=env, capture_output=True, text=True, timeout=500)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        with open(out) as f:
+            results = json.load(f)
+        rec = results["olmo_1b|decode_32k|single"]
+        assert rec["status"] == "ok", rec
+        assert rec["chips"] == 256
+        assert rec["scan_peak_gb_dev"] > 0

@@ -1,0 +1,186 @@
+"""Unit tests for the CamJ core energy equations (Sec. 4)."""
+import math
+
+import pytest
+
+from repro.core import (ActivePixelSensor, AnalogArray,
+                        AnalogToDigitalConverter, ComputeUnit, Domain,
+                        DoubleBuffer, DynamicCell, HWConfig, LineBuffer,
+                        Mapping, NonLinearCell, PixelInput, ProcessStage,
+                        StaticCell, SystolicArray, adc_energy_per_conversion,
+                        component_energy, estimate_delays, estimate_energy,
+                        scale_energy, thermal_noise_capacitance, walden_fom)
+from repro.core.constants import BOLTZMANN, ROOM_TEMPERATURE
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5/6 — dynamic cells
+# ---------------------------------------------------------------------------
+def test_dynamic_cell_cv2():
+    cell = DynamicCell(capacitance=100e-15, v_swing=1.0, num_nodes=3)
+    assert cell.energy(1e-6) == pytest.approx(3 * 100e-15 * 1.0)
+
+
+def test_thermal_noise_capacitance_eq6():
+    # 3*sigma < LSB/2  =>  C = 36kT/LSB^2
+    c = thermal_noise_capacitance(1.0, 8)
+    lsb = 1.0 / 256
+    assert c == pytest.approx(36 * BOLTZMANN * ROOM_TEMPERATURE / lsb ** 2)
+    # higher resolution -> quadratically larger capacitance per bit (4x/bit)
+    assert thermal_noise_capacitance(1.0, 9) == pytest.approx(4 * c)
+
+
+def test_dynamic_cell_capacitance_from_noise_bound():
+    cell = DynamicCell(v_swing=1.0, resolution_bits=8)
+    assert cell.node_capacitance() == pytest.approx(
+        thermal_noise_capacitance(1.0, 8))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7-10 — static-biased cells
+# ---------------------------------------------------------------------------
+def test_static_cell_direct_drive_eq9():
+    # E = C * Vswing * VDDA, independent of delay
+    cell = StaticCell(load_capacitance=1e-12, v_swing=1.0, vdda=2.5,
+                      drives_load=True)
+    assert cell.energy(1e-3) == pytest.approx(1e-12 * 1.0 * 2.5)
+    assert cell.energy(1e-6) == pytest.approx(cell.energy(1e-3))
+
+
+def test_static_cell_gm_id_eq10():
+    # I = 2*pi*C*GBW/(gm/Id), GBW = gain/delay => E = V*2*pi*C*gain/gmid
+    cell = StaticCell(load_capacitance=100e-15, v_swing=1.0, vdda=2.5,
+                      drives_load=False, gain=2.0, gm_id=15.0)
+    expected = 2.5 * 2 * math.pi * 100e-15 * 2.0 / 15.0
+    assert cell.energy(1e-5) == pytest.approx(expected)
+    # bias current scales inversely with delay
+    assert cell.bias_current(1e-5) == pytest.approx(
+        10 * cell.bias_current(1e-4))
+
+
+def test_static_cell_bias_override_eq7():
+    cell = StaticCell(bias_current_override=1e-6, vdda=2.0,
+                      t_static_fraction=0.5, drives_load=False)
+    assert cell.energy(1e-3) == pytest.approx(2.0 * 1e-6 * 0.5e-3)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12 — non-linear cells / Walden FoM
+# ---------------------------------------------------------------------------
+def test_walden_fom_monotone_regions():
+    assert walden_fom(1e4) > walden_fom(1e6)      # survey dips mid-range
+    assert walden_fom(1e10) > walden_fom(1e8)     # rises at GHz rates
+
+
+def test_adc_energy_scales_with_bits():
+    assert adc_energy_per_conversion(1e6, 10) == pytest.approx(
+        4 * adc_energy_per_conversion(1e6, 8))
+
+
+def test_nonlinear_cell_override():
+    cell = NonLinearCell(resolution_bits=10, energy_per_conversion=5e-12)
+    assert cell.energy(1e-6) == 5e-12
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4/13 — component aggregation and access counts
+# ---------------------------------------------------------------------------
+def test_component_energy_even_delay_allocation():
+    cells = [DynamicCell(capacitance=10e-15, v_swing=1.0),
+             DynamicCell(capacitance=20e-15, v_swing=1.0)]
+    assert component_energy(cells, 1e-3) == pytest.approx(30e-15)
+
+
+def test_cds_doubles_sf_accesses():
+    aps_cds = ActivePixelSensor(correlated_double_sampling=True)
+    aps_no = ActivePixelSensor(correlated_double_sampling=False)
+    assert aps_cds.energy_per_access(1e-5) > aps_no.energy_per_access(1e-5)
+
+
+def test_afa_access_count_eq3():
+    arr = AnalogArray(name="col", num_components=100,
+                      component=AnalogToDigitalConverter())
+    assert arr.accesses_per_component(1000) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Process scaling
+# ---------------------------------------------------------------------------
+def test_scale_energy_monotone():
+    assert scale_energy(1.0, 130, 65) > 1.0
+    assert scale_energy(1.0, 22, 65) < 1.0
+    assert scale_energy(1.0, 65, 65) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 15/16 — digital units
+# ---------------------------------------------------------------------------
+def test_compute_unit_cycles_and_energy():
+    u = ComputeUnit(name="u", energy_per_cycle=2e-12,
+                    output_pixels_per_cycle=(1, 4), num_stages=3,
+                    clock_mhz=100)
+    assert u.cycles_for_outputs(400) == 100 + 3
+    assert u.energy_for_outputs(400) == pytest.approx(103 * 2e-12)
+
+
+def test_memory_eq16_leakage_alpha():
+    m = DoubleBuffer(name="m", capacity_bytes=1024, leakage_power=1e-6,
+                     read_energy_per_access=1e-12,
+                     write_energy_per_access=2e-12, active_fraction=0.5)
+    e = m.energy_per_frame(10, 5, frame_time=1.0)
+    assert e == pytest.approx(10e-12 + 10e-12 + 0.5e-6)
+
+
+def test_systolic_array_mac_energy_scaling():
+    a65 = SystolicArray(name="a", process_node_nm=65)
+    a22 = SystolicArray(name="b", process_node_nm=22)
+    assert a22.mac_energy() < a65.mac_energy()
+
+
+# ---------------------------------------------------------------------------
+# Sec. 4.1 — delay model
+# ---------------------------------------------------------------------------
+def _simple_system(frame_rate=30.0, clock_mhz=10.0):
+    px = PixelInput(name="pixels", output_size=(32, 32))
+    stage = ProcessStage(name="edge", input_size=(32, 32), kernel_size=(3, 3),
+                         stride=(1, 1), output_size=(30, 30))
+    stage.set_input_stage(px)
+    hw = HWConfig(name="t", frame_rate=frame_rate)
+    hw.add_analog_array(AnalogArray(name="pixel_array", num_components=1024,
+                                    component=ActivePixelSensor()))
+    hw.add_analog_array(AnalogArray(
+        name="adc", num_components=32,
+        component=AnalogToDigitalConverter()))
+    hw.add_memory(LineBuffer(name="lb", capacity_bytes=96, num_lines=3))
+    hw.add_compute(ComputeUnit(name="edge_u", energy_per_cycle=1e-12,
+                               input_pixels_per_cycle=(3, 3),
+                               num_stages=2, clock_mhz=clock_mhz),
+                   input_memory="lb")
+    mapping = Mapping({"pixels": "pixel_array", "edge": "edge_u"})
+    return hw, [px, stage], mapping
+
+
+def test_analog_budget_split():
+    hw, stages, mapping = _simple_system()
+    rep = estimate_delays(hw, stages, mapping)
+    # T_A = (T_FR - T_D) / (n_analog + 1 exposure phase)
+    assert rep.num_analog_phases == 3
+    assert rep.analog_stage_delay == pytest.approx(
+        (1 / 30.0 - rep.digital_latency) / 3)
+    assert rep.feasible
+
+
+def test_stall_detected_when_digital_too_slow():
+    hw, stages, mapping = _simple_system(frame_rate=30.0, clock_mhz=0.00002)
+    rep = estimate_delays(hw, stages, mapping)
+    assert rep.analog_stage_delay <= 0
+    assert any("cannot meet" in w for w in rep.stall_warnings)
+    with pytest.raises(ValueError):
+        estimate_energy(hw, stages, mapping, strict=True)
+
+
+def test_line_buffer_capacity_stall():
+    hw, stages, mapping = _simple_system()
+    hw.memories["lb"].capacity_bytes = 8    # < 3 rows of 32 pixels
+    rep = estimate_delays(hw, stages, mapping)
+    assert any("too small" in w for w in rep.stall_warnings)

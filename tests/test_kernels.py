@@ -1,0 +1,99 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _img(h, w, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=(h, w)).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(32, 64), (64, 96), (120, 160), (17, 33)])
+@pytest.mark.parametrize("factor", [2, 4])
+def test_binning_shapes(shape, factor):
+    img = _img(*shape)
+    got = ops.binning(img, factor=factor)
+    want = ref.binning_ref(img, factor=factor)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_binning_dtypes(dtype):
+    img = _img(32, 64, dtype)
+    got = ops.binning(img, factor=2)
+    want = ref.binning_ref(img, factor=2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(32, 48), (64, 96), (100, 140)])
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_stencil_conv_shapes(shape, k):
+    img = _img(*shape)
+    ker = jnp.asarray(RNG.normal(size=(k, k)).astype(np.float32))
+    got = ops.stencil_conv(img, ker)
+    want = ref.stencil_conv_ref(img, ker)
+    assert got.shape == (shape[0] - k + 1, shape[1] - k + 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(64, 96), (33, 47)])
+@pytest.mark.parametrize("threshold", [0.1, 0.5, 1.5])
+def test_frame_event(shape, threshold):
+    cur, prev = _img(*shape), _img(*shape)
+    got = ops.frame_event(cur, prev, threshold)
+    want = ref.frame_event_ref(cur, prev, threshold)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mnk", [(64, 64, 64), (130, 70, 150), (16, 256, 8),
+                                 (1, 64, 1)])
+def test_matmul_shapes(mnk):
+    m, k, n = mnk
+    a = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    got = ops.matmul(a, b, bm=64, bn=64, bk=32)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(np.float32, 1e-4)])
+def test_matmul_dtype(dtype, rtol):
+    a = jnp.asarray(RNG.normal(size=(96, 64)).astype(dtype))
+    b = jnp.asarray(RNG.normal(size=(64, 80)).astype(dtype))
+    np.testing.assert_allclose(ops.matmul(a, b), ref.matmul_ref(a, b),
+                               rtol=rtol, atol=rtol)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (1, 2, 2, 128, 32),    # MHA
+    (2, 4, 2, 256, 64),    # GQA 2x
+    (1, 8, 1, 128, 64),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, hkv, s, d, causal):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_block_invariance():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)).astype(np.float32))
+    a = ops.flash_attention(q, k, v, bq=32, bk=32)
+    b = ops.flash_attention(q, k, v, bq=128, bk=64)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,138 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (AnalogArray, AnalogToDigitalConverter, DynamicCell,
+                        ProcessStage, StaticCell, scale_energy,
+                        thermal_noise_capacitance, walden_fom)
+from repro.core.constants import sram_access_energy
+from repro.energy.hlo import _shape_bytes, collective_bytes
+from repro.energy.roofline import roofline_terms
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Energy-model invariants
+# ---------------------------------------------------------------------------
+@given(c=st.floats(1e-15, 1e-9), v=st.floats(0.1, 3.3),
+       n=st.integers(1, 64))
+def test_dynamic_energy_nonnegative_and_linear_in_nodes(c, v, n):
+    e1 = DynamicCell(capacitance=c, v_swing=v, num_nodes=1).energy(1e-6)
+    en = DynamicCell(capacitance=c, v_swing=v, num_nodes=n).energy(1e-6)
+    assert en >= 0
+    assert math.isclose(en, n * e1, rel_tol=1e-9)
+
+
+@given(v=st.floats(0.2, 3.0), bits=st.integers(1, 14))
+def test_noise_capacitance_monotone_in_resolution(v, bits):
+    assert thermal_noise_capacitance(v, bits + 1) > \
+        thermal_noise_capacitance(v, bits)
+
+
+@given(f=st.floats(1e3, 1e10))
+def test_walden_fom_positive(f):
+    assert walden_fom(f) > 0
+
+
+@given(node=st.sampled_from([180, 130, 110, 90, 65, 45, 28, 22, 14, 7]),
+       e=st.floats(1e-15, 1e-9))
+def test_scale_energy_positive_and_identity(node, e):
+    assert scale_energy(e, node, node) == pytest.approx(e)
+    assert scale_energy(e, node, 65) > 0
+
+
+@given(ops=st.floats(1, 1e9), n=st.integers(1, 10_000))
+def test_afa_access_count_scaling(ops, n):
+    arr = AnalogArray(name="a", num_components=n,
+                      component=AnalogToDigitalConverter())
+    acc = arr.accesses_per_component(ops)
+    assert math.isclose(acc * n, ops, rel_tol=1e-9)
+
+
+@given(size=st.floats(64, 1e7), bits=st.integers(8, 256))
+def test_sram_access_energy_monotone_in_width(size, bits):
+    assert sram_access_energy(size, bits + 8) > sram_access_energy(size, bits)
+
+
+@given(h=st.integers(4, 64), w=st.integers(4, 64),
+       k=st.integers(1, 4), s=st.integers(1, 4))
+def test_stencil_geometry_consistency(h, w, k, s):
+    """Declared-geometry check accepts exactly the floor formula."""
+    if k > h or k > w:
+        return
+    oh = (h - k) // s + 1
+    ow = (w - k) // s + 1
+    stage = ProcessStage(name="s", input_size=(h, w), kernel_size=(k, k),
+                         stride=(s, s), output_size=(oh, ow))
+    stage.check_geometry()          # must not raise
+    assert stage.num_ops() == oh * ow * k * k
+
+
+# ---------------------------------------------------------------------------
+# Roofline invariants
+# ---------------------------------------------------------------------------
+@given(f=st.floats(1e6, 1e15), b=st.floats(1e3, 1e12),
+       c=st.floats(0, 1e12), chips=st.integers(1, 4096),
+       mf=st.floats(1e6, 1e18))
+def test_roofline_terms_invariants(f, b, c, chips, mf):
+    t = roofline_terms(f, b, c, chips, mf)
+    assert t.bound_time >= max(t.t_compute, t.t_memory, t.t_collective) - 1e-12
+    assert t.dominant in ("compute", "memory", "collective")
+    assert t.flops_global == pytest.approx(f * chips)
+    # roofline fraction can never exceed useful ratio when compute-bound
+    if t.dominant == "compute":
+        assert t.roofline_fraction <= t.useful_compute_ratio * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       dtype=st.sampled_from(["f32", "bf16", "s32", "u8"]))
+def test_shape_bytes(dims, dtype):
+    nbytes = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]{{0}}"
+    want = nbytes * int(np.prod(dims))
+    assert _shape_bytes(s) == want
+
+
+def test_collective_parse_weighting():
+    hlo = """
+  %ar = f32[128,8]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[64]{0} all-gather(%y), dimensions={0}
+  %cp = f32[4]{0} collective-permute(%z)
+"""
+    weighted, per_op = collective_bytes(hlo)
+    assert per_op["all-reduce"] == 128 * 8 * 4
+    assert per_op["all-gather"] == 64 * 2
+    assert per_op["collective-permute"] == 16
+    assert weighted == 2 * 4096 + 128 + 16
+
+
+# ---------------------------------------------------------------------------
+# Kernel-reference invariants
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 6))
+def test_binning_preserves_mean(factor):
+    rng = np.random.default_rng(factor)
+    img = jnp.asarray(rng.normal(size=(factor * 8, factor * 8))
+                      .astype(np.float32))
+    binned = ref.binning_ref(img, factor)
+    np.testing.assert_allclose(float(binned.mean()), float(img.mean()),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 1000))
+def test_frame_event_self_is_zero(seed):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    ev = ref.frame_event_ref(img, img, threshold=1e-6)
+    assert float(ev.sum()) == 0
