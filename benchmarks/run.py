@@ -91,14 +91,15 @@ def fig12_stage_breakdown() -> List[str]:
 
 
 def kernel_microbench() -> List[str]:
-    """Pallas kernels (interpret-mode walltime — correctness-harness
-    throughput, NOT a TPU number)."""
+    """Pallas kernels: walltime in whichever mode the backend selects
+    (compiled Mosaic on TPU, interpreter elsewhere — reported per row)."""
     import numpy as np
     import jax.numpy as jnp
-    from repro.kernels import ops
+    from repro.kernels import kernel_mode, ops
     rng = np.random.default_rng(0)
     img = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
     ker = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
+    mode = kernel_mode()
     out = []
     for name, fn in (
             ("binning", lambda: ops.binning(img).block_until_ready()),
@@ -111,8 +112,78 @@ def kernel_microbench() -> List[str]:
         for _ in range(3):
             fn()
         us = (time.perf_counter() - t0) / 3 * 1e6
-        out.append(f"kernel_{name},{us:.0f},interpret_mode")
+        out.append(f"kernel_{name},{us:.0f},mode={mode}")
     return out
+
+
+def design_sweep(n_scalar_sample: int = 64,
+                 emit_json: bool = True) -> List[str]:
+    """Batched design-space engine vs the scalar estimate_energy loop.
+
+    Scores >=10k Ed-Gaze + Rhythmic design points (node x frame rate x
+    systolic dims x memory tech x gating x pitch) through ``sweep()`` and
+    compares wall-clock against looping the scalar oracle over the same
+    points.  The scalar side is timed on an even subsample and projected
+    (the full loop at ~0.2 ms/point would dominate the harness); the
+    batched side is measured directly, cold (lowering + jit) and hot.
+    """
+    from repro.core.sweep import scalar_sweep, sweep
+    from repro.kernels import kernel_mode
+
+    grids = {"cis_node": [130, 110, 90, 65, 45, 32, 28],
+             "frame_rate": [15.0, 30.0, 60.0, 120.0],
+             "sys_rows": [4.0, 8.0, 16.0, 32.0],
+             "sys_cols": [8.0, 16.0, 32.0],
+             "mem_tech": ["sram_hp", "stt"],
+             "active_fraction_scale": [0.25, 1.0],
+             "pixel_pitch_um": [3.0, 5.0]}
+
+    def run_all():
+        return [sweep("edgaze", grids), sweep("rhythmic", grids)]
+
+    t0 = time.perf_counter()
+    results = run_all()
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    results = run_all()
+    hot_s = time.perf_counter() - t0
+    n_points = sum(len(r) for r in results)
+    assert n_points >= 10_000, n_points
+
+    # scalar oracle: even subsample over both algorithms, projected
+    t0 = time.perf_counter()
+    n_sampled = 0
+    import numpy as np
+    for res in results:
+        idx = np.linspace(0, len(res) - 1,
+                          n_scalar_sample // len(results)).astype(int)
+        scalar_sweep(res.algorithm, res.params, idx)
+        n_sampled += len(idx)
+    scalar_us_pp = (time.perf_counter() - t0) / n_sampled * 1e6
+    scalar_total_s = scalar_us_pp * n_points / 1e6
+
+    speedup_hot = scalar_total_s / hot_s
+    speedup_cold = scalar_total_s / cold_s
+    rec = dict(n_points=n_points,
+               batched_hot_s=round(hot_s, 4),
+               batched_cold_s=round(cold_s, 4),
+               batched_us_per_point=round(hot_s / n_points * 1e6, 3),
+               scalar_us_per_point=round(scalar_us_pp, 1),
+               scalar_sampled_points=n_sampled,
+               scalar_projected_s=round(scalar_total_s, 2),
+               speedup_hot=round(speedup_hot, 1),
+               speedup_cold=round(speedup_cold, 1),
+               meets_20x=bool(speedup_hot >= 20.0),
+               kernel_mode=kernel_mode())
+    if emit_json:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "BENCH_sweep.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return [f"design_sweep,{hot_s*1e6:.0f},points={n_points}"
+            f" speedup={speedup_hot:.0f}x (cold {speedup_cold:.1f}x)"
+            f" scalar={scalar_us_pp:.0f}us/pt"
+            f" batched={hot_s/n_points*1e6:.2f}us/pt"
+            f" mode={rec['kernel_mode']}"]
 
 
 def roofline_table() -> List[str]:
@@ -137,7 +208,8 @@ def roofline_table() -> List[str]:
 
 
 BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
-           fig12_stage_breakdown, kernel_microbench, roofline_table]
+           fig12_stage_breakdown, kernel_microbench, design_sweep,
+           roofline_table]
 
 
 def main() -> None:

@@ -1,9 +1,12 @@
 """Architectural exploration: the paper's core promise, as a script.
 
-Sweeps the Ed-Gaze system over CIS process nodes and design variants
-(Sec. 6), prints the trade-off table, and demonstrates the decoupled
-interface: the *same* algorithm DAG is re-mapped across hardware variants
-by swapping the mapping/hardware only.
+Two levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
+
+1. the paper's own tables — every variant x CIS node, now scored through
+   the batched energy engine (one lowering + one device call per variant);
+2. a full design-space sweep — thousands of (node, frame rate, systolic
+   geometry, memory technology, power gating, pixel pitch) points in a
+   single batched evaluation, with the Pareto-style winners printed.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
 the same component-energy methodology applied to the 256-chip training
@@ -14,6 +17,7 @@ Run:  PYTHONPATH=src python examples/explore_design_space.py
 import json
 import os
 
+from repro.core.sweep import sweep
 from repro.core.usecases import run_study
 
 
@@ -31,6 +35,40 @@ def main():
     for r in run_study("rhythmic"):
         print(f"{r['cis_node']:>5}n {r['variant']:<14} "
               f"{r['total_uj']:>10.1f}")
+
+    # ----- full sweep: the batched engine's reason to exist ---------------
+    grids = {"cis_node": [130, 110, 90, 65, 45, 32, 28],
+             "frame_rate": [15.0, 30.0, 60.0, 120.0],
+             "sys_rows": [4.0, 8.0, 16.0, 32.0],
+             "sys_cols": [8.0, 16.0, 32.0],
+             "mem_tech": ["sram_hp", "stt"],
+             "active_fraction_scale": [0.25, 1.0],
+             "pixel_pitch_um": [3.0, 5.0]}
+    res = sweep("edgaze", grids)
+    feasible = int(res.outputs["feasible"].sum())
+    print(f"\n=== Batched sweep: {len(res)} Ed-Gaze design points in "
+          f"{res.wall_s:.2f}s ({feasible} feasible) ===")
+    print(f"{'variant':<12} {'node':>5} {'fps':>5} {'sys':>7} {'mem':>7} "
+          f"{'uJ/frame':>9} {'mW/mm^2':>8}")
+    tech_names = {-1: "decl", 0: "sram", 1: "sram_hp", 2: "stt"}
+    for row in res.best("total_j", k=5):
+        sysd = f"{int(row['sys_rows'])}x{int(row['sys_cols'])}"
+        print(f"{row['variant']:<12} {int(row['cis_node']):>4}n "
+              f"{row['frame_rate']:>5.0f} {sysd:>7} "
+              f"{tech_names[int(row['mem_tech'])]:>7} "
+              f"{row['total_j']*1e6:>9.2f} {row['density_mw_mm2']:>8.3f}")
+
+    # cheapest design that still holds 120 FPS
+    import numpy as np
+    mask = (res.params["frame_rate"] == 120.0) & \
+        res.outputs["feasible"].astype(bool)
+    if mask.any():
+        i = int(np.argmin(np.where(mask, res.outputs["total_j"], np.inf)))
+        row = res.row(i)
+        print(f"\nbest @120FPS: {row['variant']} {int(row['cis_node'])}nm "
+              f"{int(row['sys_rows'])}x{int(row['sys_cols'])} "
+              f"{tech_names[int(row['mem_tech'])]} -> "
+              f"{row['total_j']*1e6:.2f} uJ/frame")
 
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "results", "dryrun.json")

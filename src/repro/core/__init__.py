@@ -22,12 +22,30 @@ from .delay import DelayReport, estimate_delays
 from .digital import (ComputeUnit, DoubleBuffer, FIFO, LineBuffer, MemoryBase,
                       SystolicArray)
 from .domains import Domain, compatible
-from .energy import EnergyReport, UnitEnergy, estimate_energy
+from .energy import (CATEGORIES, EnergyReport, UnitEnergy, estimate_energy,
+                     reference_outputs)
 from .fom import adc_energy_per_conversion, walden_fom
 from .hw import DigitalBinding, HWConfig
 from .mapping import Mapping
+from .plan import (EnergyPlan, lower, lower_cache_clear, lower_cache_info)
 from .sw import (DNNProcessStage, PixelInput, ProcessStage, Stage,
-                 topological_order)
+                 dag_signature, topological_order)
+
+# The batch evaluator and sweep front-end pull in jax + the Pallas kernel
+# stack; load them lazily so the scalar oracle stays importable jax-free.
+_LAZY_EXPORTS = {
+    "DesignPoints": ".batch", "evaluate_batch": ".batch",
+    "make_points": ".batch", "point_defaults": ".batch",
+    "SweepResult": ".sweep", "scalar_point": ".sweep", "sweep": ".sweep",
+}
+
+
+def __getattr__(name):
+    target = _LAZY_EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(target, __name__), name)
 
 __all__ = [
     "ACell", "DynamicCell", "StaticCell", "NonLinearCell", "component_energy",
@@ -44,4 +62,9 @@ __all__ = [
     "EnergyReport", "UnitEnergy", "run_design_checks", "DesignCheckError",
     "walden_fom", "adc_energy_per_conversion", "scale_energy",
     "sram_access_energy", "MIPI_CSI2_ENERGY_PER_BYTE", "UTSV_ENERGY_PER_BYTE",
+    # batched design-space engine (batch/sweep symbols resolve lazily)
+    "CATEGORIES", "DesignPoints", "EnergyPlan", "SweepResult",
+    "dag_signature", "evaluate_batch", "lower", "lower_cache_clear",
+    "lower_cache_info", "make_points", "point_defaults",
+    "reference_outputs", "scalar_point", "sweep",
 ]

@@ -93,6 +93,18 @@ def _lookup_scale(table: dict, node_nm: int) -> float:
     return table[lo] ** (1 - t) * table[hi] ** t
 
 
+def table_points(table: dict):
+    """Sorted ``(nodes, values)`` tuples from a node->value scaling table.
+
+    The batched energy engine vectorizes :func:`_lookup_scale`'s geometric
+    interpolation as ``exp(interp(node, nodes, log(values)))`` — linear
+    interpolation of the log-values over the node axis is exactly the
+    ``lo**(1-t) * hi**t`` rule above, including the endpoint clamping.
+    """
+    nodes = sorted(table)
+    return tuple(float(n) for n in nodes), tuple(float(table[n]) for n in nodes)
+
+
 def sram_access_energy(size_bytes: float, bits_per_access: float,
                        node_nm: int = 65) -> float:
     """DESTINY-flavoured SRAM per-access dynamic energy.

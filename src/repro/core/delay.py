@@ -53,6 +53,27 @@ def _stencil_rows(stage: Stage) -> int:
     return 1
 
 
+def start_weight(hw: HWConfig, binding, stage: Stage, dep: Stage) -> float:
+    """Fraction of the producer's runtime the consumer must wait for.
+
+    ``start = dep_start + w * dep_duration`` unifies the three memory
+    hand-off rules of Sec. 4.1: a line buffer releases the consumer once the
+    stencil-height rows are resident (w = rows/total), a FIFO streams
+    (w = 0), and a double buffer / default hands off the full tile (w = 1).
+    Shared by the cycle-level simulator below and the batched-engine
+    lowering pass (plan.py), which bakes the weights into an edge matrix.
+    """
+    mem = (hw.memories.get(binding.input_memory)
+           if binding.input_memory else None)
+    if isinstance(mem, LineBuffer):
+        rows_needed = max(_stencil_rows(stage), mem.num_lines)
+        total_rows = dep.output_size[0] if dep.output_size else 1
+        return min(rows_needed / max(total_rows, 1), 1.0)
+    if isinstance(mem, FIFO):
+        return 0.0
+    return 1.0
+
+
 def estimate_delays(hw: HWConfig, stages: List[Stage], mapping: Mapping,
                     host_clock_mhz: float = 500.0) -> DelayReport:
     """Cycle-level simulation of the digital stages + analog budget split."""
@@ -77,19 +98,8 @@ def estimate_delays(hw: HWConfig, stages: List[Stage], mapping: Mapping,
             if dep.name in end_time:
                 dep_start = start_time[dep.name]
                 dep_end = end_time[dep.name]
-                mem = (hw.memories.get(binding.input_memory)
-                       if binding.input_memory else None)
-                if isinstance(mem, LineBuffer):
-                    # start once the stencil-height lines are resident
-                    rows_needed = max(_stencil_rows(s), mem.num_lines)
-                    total_rows = dep.output_size[0] if dep.output_size else 1
-                    frac = min(rows_needed / max(total_rows, 1), 1.0)
-                    start = max(start, dep_start
-                                + (dep_end - dep_start) * frac)
-                elif isinstance(mem, FIFO):
-                    start = max(start, dep_start)  # streaming
-                else:  # DoubleBuffer / default: wait for the full tile
-                    start = max(start, dep_end)
+                w = start_weight(hw, binding, s, dep)
+                start = max(start, dep_start + (dep_end - dep_start) * w)
             # analog producers stream at the analog rate; digital consumers
             # may start immediately after the first rows -> approximated as 0.
 

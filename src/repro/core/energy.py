@@ -21,6 +21,11 @@ from .hw import HWConfig
 from .mapping import Mapping
 from .sw import DNNProcessStage, PixelInput, ProcessStage, Stage, topological_order
 
+#: component-level breakdown categories, in report order (Eq. 1 split);
+#: the batched engine's output schema (``cat_<name>_j``) follows this.
+CATEGORIES = ("SEN", "COMP-A", "MEM-A", "ADC", "COMP-D", "MEM-D", "MIPI",
+              "UTSV")
+
 
 @dataclasses.dataclass
 class UnitEnergy:
@@ -223,6 +228,25 @@ def estimate_energy(hw: HWConfig, stages: List[Stage], mapping: Mapping,
 
     return EnergyReport(per_unit=per_unit, delay=delay, notes=notes,
                         hw_name=hw.name)
+
+
+def reference_outputs(report: EnergyReport, hw: HWConfig) -> Dict[str, float]:
+    """Flatten a scalar report into the batched-engine output schema.
+
+    Keys match ``repro.core.batch.evaluate_batch`` so the scalar path can
+    serve as the reference oracle in parity tests and benchmarks.
+    """
+    cats = report.by_category()
+    out = {f"cat_{c}_j": cats.get(c, 0.0) for c in CATEGORIES}
+    out["total_j"] = report.total()
+    out["on_sensor_j"] = report.total(include_off_sensor=False)
+    out["t_d_s"] = report.delay.digital_latency
+    out["t_a_s"] = report.delay.analog_stage_delay
+    out["feasible"] = float(report.delay.analog_stage_delay > 0)
+    out["area_mm2"] = hw.total_area_mm2()
+    out["power_mw"] = report.on_sensor_power(hw.frame_rate) * 1e3
+    out["density_mw_mm2"] = out["power_mw"] / max(out["area_mm2"], 1e-9)
+    return out
 
 
 def _unit_layer(hw: HWConfig, unit_name: str) -> int:

@@ -27,6 +27,16 @@ _MEDIAN_FOM_TABLE = [
 ]
 
 
+def fom_table_points():
+    """``(log10(rates), log10(foms))`` tuples for vectorized log-log interp.
+
+    ``10 ** interp(log10(rate), *fom_table_points())`` reproduces
+    :func:`walden_fom` exactly, including the endpoint clamping.
+    """
+    return (tuple(math.log10(f) for f, _ in _MEDIAN_FOM_TABLE),
+            tuple(math.log10(e) for _, e in _MEDIAN_FOM_TABLE))
+
+
 def walden_fom(sampling_rate: float) -> float:
     """Median Walden FoM (J/conversion-step) at a sampling rate, log-log interp."""
     pts = _MEDIAN_FOM_TABLE

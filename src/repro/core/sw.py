@@ -132,6 +132,27 @@ class DNNProcessStage(Stage):
         raise ValueError(f"unknown op_type {self.op_type}")
 
 
+def dag_signature(stages: Sequence[Stage]) -> tuple:
+    """Hashable structural signature of a software DAG.
+
+    Two DAGs with the same signature produce identical access counts in the
+    energy model — the batched engine's lowering cache keys on this (plus
+    the hardware/mapping signatures) so re-built but structurally identical
+    studies reuse their compiled ``EnergyPlan``.
+    """
+    def one(s: Stage) -> tuple:
+        fields = [type(s).__name__, s.name, tuple(s.output_size)]
+        for attr in ("input_size", "kernel_size", "stride", "ops_per_output",
+                     "irregular", "op_type"):
+            if hasattr(s, attr):
+                v = getattr(s, attr)
+                fields.append(tuple(v) if isinstance(v, (list, tuple)) else v)
+        fields.append(tuple(d.name for d in s.inputs))
+        return tuple(fields)
+
+    return tuple(one(s) for s in topological_order(stages))
+
+
 def topological_order(stages: Sequence[Stage]) -> List[Stage]:
     """Topo-sort the DAG; raises on cycles (design check #3, Sec. 3.2)."""
     order: List[Stage] = []

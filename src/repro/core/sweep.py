@@ -1,0 +1,225 @@
+"""Design-space sweeps: parameter grids -> batched energy evaluation.
+
+``sweep()`` is the architectural-exploration front door the paper promises
+(Sec. 6): give it an algorithm ("edgaze" / "rhythmic") and per-axis value
+grids, and it scores the full cartesian product — thousands to hundreds of
+thousands of design points — with one lowering + one jit'd device call per
+structural variant.  The scalar ``estimate_energy`` path stays available
+as the reference oracle via :func:`scalar_point`.
+
+    res = sweep("edgaze", {"variant": ["2d_in", "3d_in"],
+                           "cis_node": [130, 90, 65, 45, 28],
+                           "frame_rate": [15, 30, 60],
+                           "sys_rows": [8, 16, 32]})
+    best = res.best("total_j")
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .batch import (TECH_DECLARED, evaluate_batch, make_points,
+                    point_defaults)
+from .digital import SystolicArray
+from .energy import estimate_energy, reference_outputs
+from .plan import CATEGORIES, EnergyPlan, TECH_INDEX, lower
+from .usecases.edgaze import EDGAZE_VARIANTS, build_edgaze
+from .usecases.rhythmic import RHYTHMIC_VARIANTS, build_rhythmic
+
+ALGORITHMS = {
+    "edgaze": (build_edgaze, EDGAZE_VARIANTS),
+    "rhythmic": (build_rhythmic, RHYTHMIC_VARIANTS),
+}
+
+#: numeric sweep axes (everything except the structural ``variant`` axis)
+AXES = ("cis_node", "soc_node", "mem_tech", "sys_rows", "sys_cols",
+        "frame_rate", "active_fraction_scale", "pixel_pitch_um")
+
+_REF_CIS_NODE = 65   # structures are built once here and re-scaled per point
+
+
+def _tech_code(v) -> int:
+    if v is None or v == "declared" or v == TECH_DECLARED:
+        return TECH_DECLARED
+    if isinstance(v, str):
+        if v not in TECH_INDEX:
+            raise KeyError(f"unknown memory technology {v!r}; valid: "
+                           f"{sorted(TECH_INDEX)} or 'declared'")
+        return TECH_INDEX[v]
+    return int(v)
+
+
+def _algorithm(name: str):
+    if name not in ALGORITHMS:
+        raise KeyError(f"unknown algorithm {name!r}; valid: "
+                       f"{sorted(ALGORITHMS)}")
+    return ALGORITHMS[name]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    algorithm: str
+    params: Dict[str, np.ndarray]        # per-point axis values (+ variant)
+    outputs: Dict[str, np.ndarray]       # per-point model outputs
+    variant_meta: Dict[str, Dict]        # variant -> plan metadata
+    wall_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.outputs["total_j"])
+
+    def select(self, **filters) -> np.ndarray:
+        """Boolean mask of points matching exact param values."""
+        mask = np.ones(len(self), bool)
+        for k, v in filters.items():
+            mask &= self.params[k] == v
+        return mask
+
+    def row(self, i: int) -> Dict:
+        d = {k: v[i] for k, v in self.params.items()}
+        d.update({k: v[i] for k, v in self.outputs.items()})
+        return d
+
+    def best(self, metric: str = "total_j", feasible_only: bool = True,
+             k: int = 1) -> List[Dict]:
+        """Top-k rows by ``metric`` (ascending); [] if none qualify."""
+        vals = np.asarray(self.outputs[metric], np.float64).copy()
+        if feasible_only:
+            vals[~self.outputs["feasible"].astype(bool)] = np.inf
+        idx = [int(i) for i in np.argsort(vals)[:k]
+               if np.isfinite(vals[int(i)])]
+        return [self.row(i) for i in idx]
+
+
+def build_variant(algorithm: str, variant: str, *, cis_node: int = 65,
+                  soc_node: int = 22):
+    build, variants = _algorithm(algorithm)
+    assert variant in variants, (algorithm, variant)
+    return build(variant, cis_node=cis_node, soc_node=soc_node)
+
+
+def lower_variant(algorithm: str, variant: str, *,
+                  soc_node: int = 22) -> EnergyPlan:
+    """Lower one structural variant (cached on the structural signature).
+
+    The structure is built at a fixed reference CIS node; the node axes are
+    swept numerically by the evaluator, so the cache hits for any grid.
+    """
+    ref = _REF_CIS_NODE if soc_node != _REF_CIS_NODE else 130
+    hw, stages, mapping, _meta = build_variant(
+        algorithm, variant, cis_node=ref, soc_node=soc_node)
+    return lower(hw, stages, mapping)
+
+
+def sweep(algorithm: str = "edgaze",
+          grids: Optional[Dict[str, Sequence]] = None, *,
+          soc_node: int = 22, strict: bool = False) -> SweepResult:
+    """Score the cartesian product of the given parameter grids.
+
+    ``grids`` maps axis names (``variant`` + :data:`AXES`) to value lists;
+    missing axes default to the values each variant was built with.  One
+    batched device call per structural variant.
+    """
+    t0 = time.perf_counter()
+    grids = dict(grids or {})
+    _build, all_variants = _algorithm(algorithm)
+    variants = [str(v) for v in grids.pop("variant", all_variants)]
+    unknown = set(grids) - set(AXES)
+    if unknown:
+        raise KeyError(f"unknown sweep axes {sorted(unknown)}; valid: "
+                       f"['variant'] + {list(AXES)}")
+    if "mem_tech" in grids:
+        grids["mem_tech"] = [_tech_code(v) for v in grids["mem_tech"]]
+
+    params: Dict[str, List] = {k: [] for k in ("variant",) + AXES}
+    outputs: Dict[str, List] = {}
+    variant_meta: Dict[str, Dict] = {}
+
+    for variant in variants:
+        plan = lower_variant(algorithm, variant, soc_node=soc_node)
+        if strict and plan.stall_notes:
+            raise ValueError("pipeline stalls detected: "
+                             + "; ".join(plan.stall_notes))
+        defaults = point_defaults(plan)
+        axis_vals = [np.atleast_1d(np.asarray(grids.get(ax, [defaults[ax]]),
+                                              np.float64))
+                     for ax in AXES]
+        mesh = np.meshgrid(*axis_vals, indexing="ij")
+        flat = {ax: m.reshape(-1) for ax, m in zip(AXES, mesh)}
+        n = len(flat[AXES[0]])
+        points = make_points(plan, n, **flat)
+        out = evaluate_batch(plan, points)
+        if strict and not bool(out["feasible"].all()):
+            bad = int((~out["feasible"].astype(bool)).sum())
+            raise ValueError(
+                f"{variant}: {bad}/{n} design points cannot meet the frame "
+                f"rate (T_D >= T_FR, Sec. 4.1)")
+        params["variant"] += [variant] * n
+        for ax in AXES:
+            params[ax] += list(flat[ax])
+        for k, v in out.items():
+            outputs.setdefault(k, []).append(v)
+        variant_meta[variant] = dict(
+            hw_name=plan.hw_name, notes=plan.notes,
+            stall_notes=plan.stall_notes,
+            categories_present=[CATEGORIES[c]
+                                for c in sorted(set(plan.unit_category))],
+            num_units=plan.num_units)
+
+    return SweepResult(
+        algorithm=algorithm,
+        params={k: np.asarray(v) for k, v in params.items()},
+        outputs={k: np.concatenate(v) for k, v in outputs.items()},
+        variant_meta=variant_meta,
+        wall_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference oracle (one design point at a time)
+# ---------------------------------------------------------------------------
+def scalar_point(algorithm: str, variant: str, *,
+                 cis_node: float = 65, soc_node: float = 22,
+                 mem_tech=None, sys_rows: Optional[float] = None,
+                 sys_cols: Optional[float] = None,
+                 frame_rate: Optional[float] = None,
+                 active_fraction_scale: float = 1.0,
+                 pixel_pitch_um: Optional[float] = None) -> Dict[str, float]:
+    """Evaluate ONE design point through the scalar ``estimate_energy``.
+
+    Rebuilds the variant at the requested node and patches the remaining
+    swept knobs onto the ``HWConfig`` — exactly what a pre-batching sweep
+    loop had to do per point.  Returns the batched output schema.
+    """
+    hw, stages, mapping, _meta = build_variant(
+        algorithm, variant, cis_node=int(cis_node), soc_node=int(soc_node))
+    if frame_rate is not None:
+        hw.frame_rate = float(frame_rate)
+    if pixel_pitch_um is not None:
+        hw.pixel_pitch_um = float(pixel_pitch_um)
+    for binding in hw.digital.values():
+        if isinstance(binding.unit, SystolicArray):
+            if sys_rows is not None:
+                binding.unit.rows = int(sys_rows)
+            if sys_cols is not None:
+                binding.unit.cols = int(sys_cols)
+    tech = _tech_code(mem_tech)
+    for mem in hw.memories.values():
+        if tech != TECH_DECLARED:
+            mem.technology = {v: k for k, v in TECH_INDEX.items()}[tech]
+        mem.active_fraction *= active_fraction_scale
+    report = estimate_energy(hw, stages, mapping, strict=False)
+    return reference_outputs(report, hw)
+
+
+def scalar_sweep(algorithm: str, result_params: Dict[str, np.ndarray],
+                 indices: Sequence[int]) -> List[Dict[str, float]]:
+    """Run the scalar oracle over selected points of a sweep's param table."""
+    rows = []
+    for i in indices:
+        kwargs = {ax: float(result_params[ax][i]) for ax in AXES}
+        kwargs["mem_tech"] = int(result_params["mem_tech"][i])
+        rows.append(scalar_point(algorithm,
+                                 str(result_params["variant"][i]), **kwargs))
+    return rows

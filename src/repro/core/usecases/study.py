@@ -1,4 +1,11 @@
-"""Run the Sec. 6 studies: energy tables (Fig. 9/11) + power density (Tbl. 3)."""
+"""Run the Sec. 6 studies: energy tables (Fig. 9/11) + power density (Tbl. 3).
+
+``run_study`` now rides the batched energy engine: each structural variant
+is lowered once (``repro.core.plan``) and all requested CIS nodes are
+scored in a single jit'd device call (``repro.core.batch``).  The scalar
+walk survives as ``engine="scalar"`` — it is the reference oracle the
+parity tests hold the batched path against.
+"""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -21,18 +28,51 @@ def power_density(hw, report) -> Dict[str, float]:
                 density_mw_mm2=power * 1e3 / max(area, 1e-9))
 
 
+def _variants(algorithm: str):
+    return (RHYTHMIC_VARIANTS if algorithm == "rhythmic"
+            else EDGAZE_VARIANTS)
+
+
 def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
-              strict: bool = False) -> List[Dict]:
+              strict: bool = False, engine: str = "batched") -> List[Dict]:
     """Evaluate every variant x CIS node for one algorithm.
 
     Returns rows with total energy, category breakdown and power density.
+    ``engine="batched"`` (default) scores all cells in one device call per
+    variant; ``engine="scalar"`` walks the Python stage objects per cell.
     """
-    build = {"rhythmic": build_rhythmic, "edgaze": build_edgaze}[algorithm]
-    variants = (RHYTHMIC_VARIANTS if algorithm == "rhythmic"
-                else EDGAZE_VARIANTS)
+    if engine == "scalar":
+        return _run_study_scalar(algorithm, cis_nodes, soc_node, strict)
+
+    from ..sweep import sweep  # local import: sweep builds on the use-cases
+    res = sweep(algorithm, {"variant": list(_variants(algorithm)),
+                            "cis_node": list(cis_nodes)},
+                soc_node=soc_node, strict=strict)
     rows = []
     for node in cis_nodes:
-        for variant in variants:
+        for variant in _variants(algorithm):
+            mask = res.select(variant=variant, cis_node=float(node))
+            (i,) = mask.nonzero()[0][:1]
+            r = res.row(int(i))
+            present = res.variant_meta[variant]["categories_present"]
+            rows.append(dict(
+                algorithm=algorithm, variant=variant, cis_node=node,
+                total_uj=float(r["total_j"]) * 1e6,
+                on_sensor_uj=float(r["on_sensor_j"]) * 1e6,
+                breakdown_uj={c: float(r[f"cat_{c}_j"]) * 1e6
+                              for c in present},
+                power_mw=float(r["power_mw"]),
+                area_mm2=float(r["area_mm2"]),
+                density_mw_mm2=float(r["density_mw_mm2"])))
+    return rows
+
+
+def _run_study_scalar(algorithm: str, cis_nodes, soc_node: int,
+                      strict: bool) -> List[Dict]:
+    build = {"rhythmic": build_rhythmic, "edgaze": build_edgaze}[algorithm]
+    rows = []
+    for node in cis_nodes:
+        for variant in _variants(algorithm):
             hw, stages, mapping, meta = build(variant, cis_node=node,
                                               soc_node=soc_node)
             rep = estimate_energy(hw, stages, mapping, strict=strict)

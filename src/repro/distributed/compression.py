@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
@@ -66,9 +68,8 @@ def cross_pod_grad_reduce(grads: Any, mesh: Mesh, errors: Any) -> Tuple[Any, Any
         def fn(gg, ee):
             return compressed_psum_mean(gg, "pod", ee)
         spec = P(*([None] * g.ndim))
-        return jax.shard_map(fn, mesh=mesh,
-                             in_specs=(spec, spec), out_specs=(spec, spec),
-                             check_vma=False)(g, e)
+        return shard_map(fn, mesh=mesh, in_specs=(spec, spec),
+                         out_specs=(spec, spec))(g, e)
 
     flat_g, tdef = jax.tree.flatten(grads)
     flat_e = jax.tree.leaves(errors)

@@ -6,10 +6,13 @@ GQA-aware).  ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles.
 """
 from . import ops, ref
 from .binning import binning
+from .category_reduce import category_reduce
 from .flash_attention import flash_attention
 from .frame_event import frame_event
 from .matmul import matmul
+from .runtime import kernel_mode, on_tpu, resolve_interpret
 from .stencil_conv import stencil_conv
 
-__all__ = ["ops", "ref", "binning", "flash_attention", "frame_event",
-           "matmul", "stencil_conv"]
+__all__ = ["ops", "ref", "binning", "category_reduce", "flash_attention",
+           "frame_event", "kernel_mode", "matmul", "on_tpu",
+           "resolve_interpret", "stencil_conv"]

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _binning_kernel(x_ref, o_ref, *, factor: int):
     x = x_ref[...]
@@ -28,8 +30,9 @@ def _binning_kernel(x_ref, o_ref, *, factor: int):
 
 @functools.partial(jax.jit, static_argnames=("factor", "block_rows", "interpret"))
 def binning(image: jax.Array, factor: int = 2, block_rows: int = 8,
-            interpret: bool = True) -> jax.Array:
+            interpret: bool = None) -> jax.Array:
     """factor x factor average pool with stride factor over a 2-D image."""
+    interpret = resolve_interpret(interpret)
     h, w = image.shape
     if h % factor or w % factor:
         image = image[: h - h % factor, : w - w % factor]

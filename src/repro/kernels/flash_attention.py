@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -74,8 +76,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                    static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = None) -> jax.Array:
     """q: [B,H,S,D], k/v: [B,Hkv,S,D] with H % Hkv == 0 -> [B,H,S,D]."""
+    interpret = resolve_interpret(interpret)
     b, h, s, d = q.shape
     hkv = k.shape[1]
     assert h % hkv == 0, f"GQA heads {h} not a multiple of kv heads {hkv}"

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _event_kernel(cur_ref, prev_ref, o_ref, *, threshold: float):
     diff = jnp.abs(cur_ref[...].astype(jnp.float32)
@@ -21,7 +23,8 @@ def _event_kernel(cur_ref, prev_ref, o_ref, *, threshold: float):
 
 @functools.partial(jax.jit, static_argnames=("threshold", "block_rows", "interpret"))
 def frame_event(cur: jax.Array, prev: jax.Array, threshold: float = 0.1,
-                block_rows: int = 64, interpret: bool = True) -> jax.Array:
+                block_rows: int = 64, interpret: bool = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     h, w = cur.shape
     block_rows = max(min(block_rows, h), 1)
     while h % block_rows:

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .runtime import resolve_interpret
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
     k = pl.program_id(2)
@@ -34,8 +36,9 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def matmul(a: jax.Array, b: jax.Array, bm: int = 128, bn: int = 128,
-           bk: int = 128, interpret: bool = True) -> jax.Array:
+           bk: int = 128, interpret: bool = None) -> jax.Array:
     """a [M,K] @ b [K,N] -> [M,N]; pads every dim up to the block size."""
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, f"contraction mismatch {k} vs {k2}"

@@ -7,8 +7,6 @@ call these entry points only.
 """
 from __future__ import annotations
 
-import jax
-
 from . import ref
 from .binning import binning as _binning
 from .flash_attention import flash_attention as _flash_attention
@@ -16,44 +14,33 @@ from .frame_event import frame_event as _frame_event
 from .matmul import matmul as _matmul
 from .stencil_conv import stencil_conv as _stencil_conv
 
-_ON_TPU = None
-
-
-def _on_tpu() -> bool:
-    global _ON_TPU
-    if _ON_TPU is None:
-        _ON_TPU = jax.default_backend() == "tpu"
-    return _ON_TPU
-
 
 def binning(image, factor: int = 2, use_pallas: bool = True):
     if not use_pallas:
         return ref.binning_ref(image, factor)
-    return _binning(image, factor=factor, interpret=not _on_tpu())
+    return _binning(image, factor=factor)
 
 
 def stencil_conv(image, kernel, use_pallas: bool = True):
     if not use_pallas:
         return ref.stencil_conv_ref(image, kernel)
-    return _stencil_conv(image, kernel, interpret=not _on_tpu())
+    return _stencil_conv(image, kernel)
 
 
 def frame_event(cur, prev, threshold: float = 0.1, use_pallas: bool = True):
     if not use_pallas:
         return ref.frame_event_ref(cur, prev, threshold)
-    return _frame_event(cur, prev, threshold=threshold,
-                        interpret=not _on_tpu())
+    return _frame_event(cur, prev, threshold=threshold)
 
 
 def matmul(a, b, use_pallas: bool = True, **blocks):
     if not use_pallas:
         return ref.matmul_ref(a, b)
-    return _matmul(a, b, interpret=not _on_tpu(), **blocks)
+    return _matmul(a, b, **blocks)
 
 
 def flash_attention(q, k, v, causal: bool = True, use_pallas: bool = True,
                     **blocks):
     if not use_pallas:
         return ref.flash_attention_ref(q, k, v, causal)
-    return _flash_attention(q, k, v, causal=causal,
-                            interpret=not _on_tpu(), **blocks)
+    return _flash_attention(q, k, v, causal=causal, **blocks)

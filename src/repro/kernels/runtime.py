@@ -1,0 +1,34 @@
+"""Kernel runtime policy: interpret-mode selection for Pallas calls.
+
+Pallas kernels compile to Mosaic only on TPU backends; everywhere else
+(CPU CI, GPU hosts) the same kernel body must run under the Pallas
+interpreter.  Kernels take ``interpret=None`` and resolve it here at trace
+time, so the default is "compiled on TPU, interpreted elsewhere" without
+any call site hardcoding a mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_BACKEND_IS_TPU: Optional[bool] = None
+
+
+def on_tpu() -> bool:
+    global _BACKEND_IS_TPU
+    if _BACKEND_IS_TPU is None:
+        _BACKEND_IS_TPU = jax.default_backend() == "tpu"
+    return _BACKEND_IS_TPU
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> auto (interpret everywhere except TPU); bool -> as given."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)
+
+
+def kernel_mode() -> str:
+    """Human-readable mode tag for benchmark output."""
+    return "compiled" if on_tpu() else "interpret"

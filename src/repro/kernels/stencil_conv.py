@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import resolve_interpret
+
 
 def _stencil_kernel(x_ref, k_ref, o_ref, *, kh: int, kw: int,
                     block_rows: int):
@@ -38,8 +40,9 @@ def _stencil_kernel(x_ref, k_ref, o_ref, *, kh: int, kw: int,
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def stencil_conv(image: jax.Array, kernel: jax.Array, block_rows: int = 8,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool = None) -> jax.Array:
     """'valid' 2-D correlation: image [H,W] * kernel [kh,kw] -> [H-kh+1, W-kw+1]."""
+    interpret = resolve_interpret(interpret)
     h, w = image.shape
     kh, kw = kernel.shape
     oh, ow = h - kh + 1, w - kw + 1

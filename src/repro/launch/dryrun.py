@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import cost_analysis
 from ..configs import ARCH_IDS, get_config
 from ..distributed import (cache_shardings, input_shardings, param_shardings,
                            use_mesh)
@@ -173,7 +174,7 @@ def _compile(cfg, shape, mesh, unroll, vocab_chunk=0, profile="tp"):
     lowered = fn.lower(*args)
     compiled = lowered.compile()
     dt = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     ma = compiled.memory_analysis()
     coll_w, coll_ops = collective_bytes(compiled.as_text())
     # HBM-traffic proxy: every assigned buffer is written once and read once

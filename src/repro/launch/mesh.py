@@ -20,6 +20,8 @@ from typing import Optional
 
 import jax
 
+from ..compat import auto_axis_types, make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -31,8 +33,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices but only "
             f"{len(jax.devices())} visible — run under dryrun.py, which "
             f"sets XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices,
+                     axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh(data: Optional[int] = None, model: int = 1):
@@ -41,6 +43,6 @@ def make_host_mesh(data: Optional[int] = None, model: int = 1):
     if data is None:
         data = max(n // model, 1)
     need = data * model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[:need],
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[:need],
+                     axis_types=auto_axis_types(2))

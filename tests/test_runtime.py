@@ -10,6 +10,7 @@ import pytest
 
 import repro.models.model as M
 from repro.ckpt import CheckpointManager, restore_resharded
+from repro.compat import auto_axis_types, make_mesh
 from repro.configs import get_config, reduced
 from repro.data import SyntheticTextDataset
 from repro.distributed.compression import (cross_pod_grad_reduce,
@@ -68,8 +69,7 @@ def test_restore_resharded_roundtrip():
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d)
         mgr.save(1, params)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",), axis_types=auto_axis_types(1))
         from repro.distributed import param_shardings
         sh = param_shardings(params, mesh)
         p2 = restore_resharded(mgr, params, sh)
@@ -148,8 +148,7 @@ def test_quantize_roundtrip_bounded():
 
 
 def test_cross_pod_reduce_identity_single_pod():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",), axis_types=auto_axis_types(1))
     g = {"w": jnp.linspace(-1, 1, 32)}
     e = {"w": jnp.zeros(32, jnp.float32)}
     red, err = cross_pod_grad_reduce(g, mesh, e)
@@ -164,8 +163,8 @@ def test_cross_pod_reduce_identity_single_pod():
 # Sharding rules
 # ---------------------------------------------------------------------------
 def test_param_sharding_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=auto_axis_types(2))
     # 16-way axes simulated via a fake mesh dict is overkill; check the
     # rule logic with the real (1,1) mesh: everything fits trivially
     spec = spec_for_param("layers/wq", (4, 64, 64), mesh)

@@ -1,0 +1,167 @@
+"""Batched energy engine: parity vs the scalar oracle, lowering cache,
+sweep API semantics, and the Pallas category reduction."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import lower_cache_clear, lower_cache_info
+from repro.core.sweep import (AXES, scalar_point, scalar_sweep, sweep)
+from repro.core.usecases import run_study
+from repro.core.usecases.edgaze import EDGAZE_VARIANTS
+from repro.core.usecases.rhythmic import RHYTHMIC_VARIANTS
+
+RTOL = 5e-4     # batched path runs f32 on device; oracle is f64 Python
+
+OUTPUT_KEYS = ("total_j", "on_sensor_j", "t_d_s", "t_a_s", "area_mm2",
+               "power_mw", "density_mw_mm2", "cat_SEN_j", "cat_ADC_j",
+               "cat_COMP-A_j", "cat_MEM-A_j", "cat_COMP-D_j", "cat_MEM-D_j",
+               "cat_MIPI_j", "cat_UTSV_j")
+
+
+def _assert_row_matches(row, ref, ctx):
+    for k in OUTPUT_KEYS:
+        got, want = float(row[k]), float(ref[k])
+        assert got == pytest.approx(want, rel=RTOL, abs=1e-12), \
+            (ctx, k, got, want)
+    assert bool(row["feasible"]) == bool(ref["feasible"]), ctx
+
+
+# ---------------------------------------------------------------------------
+# Parity: every (variant x node) cell of both studies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algorithm,variants", [
+    ("edgaze", EDGAZE_VARIANTS), ("rhythmic", RHYTHMIC_VARIANTS)])
+def test_sweep_matches_scalar_per_cell(algorithm, variants):
+    nodes = [130.0, 65.0]
+    res = sweep(algorithm, {"variant": list(variants), "cis_node": nodes})
+    assert len(res) == len(variants) * len(nodes)
+    for i in range(len(res)):
+        row = res.row(i)
+        ref = scalar_point(algorithm, row["variant"],
+                           cis_node=row["cis_node"])
+        _assert_row_matches(row, ref,
+                            (algorithm, row["variant"], row["cis_node"]))
+
+
+def test_sweep_matches_scalar_on_all_axes():
+    """Spot-check parity with every numeric axis swept at once."""
+    res = sweep("edgaze", {
+        "variant": ["3d_in", "2d_in_mixed"],
+        "cis_node": [90.0, 45.0],
+        "frame_rate": [60.0],
+        "sys_rows": [8.0, 32.0],
+        "sys_cols": [8.0],
+        "mem_tech": ["stt", "sram_hp"],
+        "active_fraction_scale": [0.5],
+        "pixel_pitch_um": [4.0]})
+    idx = np.linspace(0, len(res) - 1, 8).astype(int)
+    for i, ref in zip(idx, scalar_sweep("edgaze", res.params, idx)):
+        _assert_row_matches(res.row(int(i)), ref, int(i))
+
+
+def test_run_study_engines_agree():
+    batched = run_study("rhythmic")
+    scalar = run_study("rhythmic", engine="scalar")
+    for rb, rs in zip(batched, scalar):
+        assert (rb["variant"], rb["cis_node"]) == \
+            (rs["variant"], rs["cis_node"])
+        assert rb["total_uj"] == pytest.approx(rs["total_uj"], rel=RTOL)
+        assert set(rb["breakdown_uj"]) == set(rs["breakdown_uj"])
+        for cat, v in rs["breakdown_uj"].items():
+            assert rb["breakdown_uj"][cat] == pytest.approx(
+                v, rel=RTOL, abs=1e-9), (rb["variant"], cat)
+
+
+# ---------------------------------------------------------------------------
+# Lowering cache
+# ---------------------------------------------------------------------------
+def test_lowering_cache_hit_on_repeated_sweeps():
+    lower_cache_clear()
+    sweep("rhythmic", {"cis_node": [65.0]})
+    first = lower_cache_info()
+    assert first["misses"] == len(RHYTHMIC_VARIANTS)
+    assert first["hits"] == 0
+    sweep("rhythmic", {"cis_node": [130.0, 65.0], "frame_rate": [60.0]})
+    second = lower_cache_info()
+    assert second["misses"] == first["misses"]       # no re-lowering
+    assert second["hits"] == first["misses"]         # every variant reused
+
+
+# ---------------------------------------------------------------------------
+# Sweep API semantics
+# ---------------------------------------------------------------------------
+def test_sweep_grid_is_cartesian_product():
+    res = sweep("rhythmic", {"variant": ["2d_in"],
+                             "cis_node": [130.0, 65.0],
+                             "frame_rate": [15.0, 30.0, 60.0]})
+    assert len(res) == 6
+    assert set(AXES) < set(res.params)
+    combos = {(c, f) for c, f in zip(res.params["cis_node"],
+                                     res.params["frame_rate"])}
+    assert len(combos) == 6
+
+
+def test_sweep_unknown_axis_rejected():
+    with pytest.raises(KeyError, match="unknown sweep axes"):
+        sweep("rhythmic", {"not_an_axis": [1]})
+
+
+def test_sweep_infeasible_points_flagged_and_strict_raises():
+    # 100 kFPS is unmeetable: T_D exceeds the frame time
+    res = sweep("edgaze", {"variant": ["2d_in"], "frame_rate": [1e5]})
+    assert not res.outputs["feasible"].any()
+    assert res.best("total_j") == []        # nothing feasible -> no winner
+    ref = scalar_point("edgaze", "2d_in", frame_rate=1e5)
+    assert not ref["feasible"]
+    # strict mirrors the scalar path: structural stall warnings raise first
+    with pytest.raises(ValueError,
+                       match="stalls detected|cannot meet the frame rate"):
+        sweep("edgaze", {"variant": ["2d_in"], "frame_rate": [1e5]},
+              strict=True)
+
+
+def test_best_returns_feasible_minimum():
+    res = sweep("edgaze", {"variant": ["3d_in"],
+                           "cis_node": [130.0, 65.0, 28.0]})
+    best = res.best("total_j", k=1)[0]
+    assert best["total_j"] == res.outputs["total_j"].min()
+
+
+# ---------------------------------------------------------------------------
+# Pallas category reduction
+# ---------------------------------------------------------------------------
+def test_category_reduce_matches_matmul():
+    import jax.numpy as jnp
+    from repro.kernels import category_reduce
+    rng = np.random.default_rng(0)
+    e = rng.normal(size=(533, 11)).astype(np.float32)
+    w = (rng.uniform(size=(11, 7)) > 0.5).astype(np.float32)
+    got = np.asarray(category_reduce(jnp.asarray(e), jnp.asarray(w),
+                                     block_points=128))
+    np.testing.assert_allclose(got, e @ w, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock: the engine must demolish the scalar loop
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_design_sweep_speedup_over_scalar():
+    grids = {"cis_node": [130.0, 90.0, 65.0, 45.0, 28.0],
+             "frame_rate": [15.0, 30.0, 60.0],
+             "sys_rows": [8.0, 16.0, 32.0],
+             "mem_tech": ["sram_hp", "stt"],
+             "active_fraction_scale": [0.25, 1.0],
+             "pixel_pitch_um": [3.0, 5.0]}
+    sweep("edgaze", grids)                       # warm: lowering + jit
+    t0 = time.perf_counter()
+    res = sweep("edgaze", grids)
+    hot_s = time.perf_counter() - t0
+    n = len(res)
+    assert n >= 1500
+    idx = np.linspace(0, n - 1, 16).astype(int)
+    t0 = time.perf_counter()
+    scalar_sweep("edgaze", res.params, idx)
+    scalar_per_point = (time.perf_counter() - t0) / len(idx)
+    speedup = scalar_per_point * n / hot_s
+    assert speedup >= 20.0, (speedup, hot_s, scalar_per_point)
