@@ -1,12 +1,17 @@
 """Architectural exploration: the paper's core promise, as a script.
 
-Two levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
+Three levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
 
 1. the paper's own tables — every variant x CIS node, now scored through
    the batched energy engine (one lowering + one device call per variant);
 2. a full design-space sweep — thousands of (node, frame rate, systolic
    geometry, memory technology, power gating, pixel pitch) points in a
-   single batched evaluation, with the Pareto-style winners printed.
+   single batched evaluation, with the Pareto-style winners printed;
+3. a streaming mega-sweep — the same grids densified to ~1e6 points (set
+   MEGA_SWEEP=1 for >=1e7), walked in bounded chunks, sharded across all
+   visible devices and reduced on device to a running top-k + per-variant
+   summaries (repro.core.shard_sweep).  Force a multi-device CPU run with
+   XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
 the same component-energy methodology applied to the 256-chip training
@@ -17,6 +22,7 @@ Run:  PYTHONPATH=src python examples/explore_design_space.py
 import json
 import os
 
+from repro.core.shard_sweep import sweep_stream
 from repro.core.sweep import sweep
 from repro.core.usecases import run_study
 
@@ -47,7 +53,8 @@ def main():
     res = sweep("edgaze", grids)
     feasible = int(res.outputs["feasible"].sum())
     print(f"\n=== Batched sweep: {len(res)} Ed-Gaze design points in "
-          f"{res.wall_s:.2f}s ({feasible} feasible) ===")
+          f"{res.eval_s:.3f}s warm (+{res.compile_s:.2f}s compile, "
+          f"{feasible} feasible) ===")
     print(f"{'variant':<12} {'node':>5} {'fps':>5} {'sys':>7} {'mem':>7} "
           f"{'uJ/frame':>9} {'mW/mm^2':>8}")
     tech_names = {-1: "decl", 0: "sram", 1: "sram_hp", 2: "stt"}
@@ -69,6 +76,33 @@ def main():
               f"{int(row['sys_rows'])}x{int(row['sys_cols'])} "
               f"{tech_names[int(row['mem_tech'])]} -> "
               f"{row['total_j']*1e6:.2f} uJ/frame")
+
+    # ----- streaming mega-sweep: bounded memory at any N -------------------
+    import numpy as np
+    mega = bool(int(os.environ.get("MEGA_SWEEP", "0")))
+    mega_grids = {
+        "cis_node": list(np.linspace(28, 130, 18 if mega else 9)),
+        "soc_node": [14.0, 22.0, 28.0] if mega else [22.0],
+        "frame_rate": list(np.linspace(15, 120, 8)),
+        "sys_rows": [4.0, 8.0, 16.0, 32.0, 64.0, 128.0],
+        "sys_cols": [4.0, 8.0, 16.0, 32.0, 64.0],
+        "mem_tech": ["sram", "sram_hp", "stt"],
+        "active_fraction_scale": list(np.linspace(0.1, 1.0, 5)),
+        "pixel_pitch_um": list(np.linspace(2.0, 6.0, 7 if mega else 4))}
+    streams = [sweep_stream(a, mega_grids, chunk_size=1 << 17, k=3)
+               for a in ("edgaze", "rhythmic")]
+    n = sum(s.n_points for s in streams)
+    pps = n / sum(s.eval_s for s in streams)
+    print(f"\n=== Streaming mega-sweep: {n:,} points over "
+          f"{streams[0].n_devices} device(s), {pps:,.0f} points/s warm "
+          f"(compile {sum(s.compile_s for s in streams):.1f}s) ===")
+    for s in streams:
+        row = s.topk[0]
+        print(f"{s.algorithm:<9} best {row['variant']:<12} "
+              f"{int(row['cis_node']):>4}n {row['frame_rate']:>5.0f}fps "
+              f"{int(row['sys_rows'])}x{int(row['sys_cols'])} -> "
+              f"{row['total_j']*1e6:.2f} uJ/frame "
+              f"({s.n_feasible:,}/{s.n_points:,} feasible)")
 
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "results", "dryrun.json")

@@ -36,7 +36,10 @@ from .sw import (DNNProcessStage, PixelInput, ProcessStage, Stage,
 _LAZY_EXPORTS = {
     "DesignPoints": ".batch", "evaluate_batch": ".batch",
     "make_points": ".batch", "point_defaults": ".batch",
-    "SweepResult": ".sweep", "scalar_point": ".sweep", "sweep": ".sweep",
+    "ChunkedGrid": ".sweep", "SweepResult": ".sweep",
+    "scalar_point": ".sweep", "sweep": ".sweep",
+    "StreamResult": ".shard_sweep", "evaluate_batch_sharded": ".shard_sweep",
+    "sweep_stream": ".shard_sweep",
 }
 
 
@@ -63,8 +66,9 @@ __all__ = [
     "walden_fom", "adc_energy_per_conversion", "scale_energy",
     "sram_access_energy", "MIPI_CSI2_ENERGY_PER_BYTE", "UTSV_ENERGY_PER_BYTE",
     # batched design-space engine (batch/sweep symbols resolve lazily)
-    "CATEGORIES", "DesignPoints", "EnergyPlan", "SweepResult",
-    "dag_signature", "evaluate_batch", "lower", "lower_cache_clear",
+    "CATEGORIES", "ChunkedGrid", "DesignPoints", "EnergyPlan",
+    "StreamResult", "SweepResult", "dag_signature", "evaluate_batch",
+    "evaluate_batch_sharded", "lower", "lower_cache_clear",
     "lower_cache_info", "make_points", "point_defaults",
-    "reference_outputs", "scalar_point", "sweep",
+    "reference_outputs", "scalar_point", "sweep", "sweep_stream",
 ]

@@ -125,9 +125,12 @@ class EnergyPlan:
     utsv_bytes: float                   # 0.0 => no uTSV row
     mipi_bytes: float
 
-    # compiled batch evaluator, attached lazily by repro.core.batch
+    # compiled batch evaluator + AOT executables (keyed on batch size /
+    # flags / mesh), attached lazily by repro.core.batch / shard_sweep
     _eval_fn: object = dataclasses.field(default=None, repr=False,
                                          compare=False)
+    _exec_cache: object = dataclasses.field(default=None, repr=False,
+                                            compare=False)
 
     @property
     def num_units(self) -> int:
@@ -210,7 +213,19 @@ def _lower_component(comp, sink_const, sink_lin, sink_fom) -> None:
 
 
 def _node_role(node_nm: int, sensor_node: int, host_node: int,
-               notes: List[str], what: str) -> int:
+               notes: List[str], what: str,
+               prefer: int = ROLE_SENSOR) -> int:
+    """Which swept node axis a unit's energy tracks.
+
+    Roles normally resolve by matching the declared node against the two
+    domains.  When the structure was built with ``sensor == host`` node
+    (e.g. the reference structure for a ``soc_node=65`` sweep), the match
+    is ambiguous — ``prefer`` breaks the tie from structural facts (die
+    layer / off-sensor mapping), so a host-layer unit keeps tracking the
+    ``soc_node`` axis instead of silently riding the ``cis_node`` sweep.
+    """
+    if sensor_node == host_node and node_nm == sensor_node:
+        return prefer
     if node_nm == sensor_node:
         return ROLE_SENSOR
     if node_nm == host_node:
@@ -230,6 +245,8 @@ def _dyn_scale(node_nm: int) -> float:
 # ---------------------------------------------------------------------------
 _PLAN_CACHE: Dict[tuple, EnergyPlan] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
+#: secondary plan caches (e.g. sweep's per-variant memo) cleared alongside
+_EXTRA_CACHES: List[dict] = []
 
 
 def lower_cache_info() -> Dict[str, int]:
@@ -238,8 +255,15 @@ def lower_cache_info() -> Dict[str, int]:
 
 def lower_cache_clear() -> None:
     _PLAN_CACHE.clear()
+    for cache in _EXTRA_CACHES:
+        cache.clear()
     _CACHE_STATS["hits"] = 0
     _CACHE_STATS["misses"] = 0
+
+
+def count_cache_hit() -> None:
+    """Record a plan reuse that short-circuited before ``lower()``."""
+    _CACHE_STATS["hits"] += 1
 
 
 def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
@@ -330,7 +354,10 @@ def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
         unit = binding.unit
         off = mapping.is_off_sensor(s)
         role = _node_role(unit.process_node_nm, sensor_node, host_node,
-                          notes, f"unit {unit.name!r}")
+                          notes, f"unit {unit.name!r}",
+                          prefer=(ROLE_HOST
+                                  if off or getattr(unit, "layer", 0) >= 1
+                                  else ROLE_SENSOR))
         d_role[i] = role
         d_node[i] = unit.process_node_nm
         d_static[i] = unit.static_power
@@ -397,15 +424,20 @@ def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
     m_size_f = np.array([max(m.capacity_bytes / 100e3, 1e-3) ** 0.5
                          for m in mem_list])
     m_alpha = np.array([m.active_fraction for m in mem_list])
-    m_role = np.array([_node_role(m.process_node_nm, sensor_node, host_node,
-                                  notes, f"memory {m.name!r}")
-                       for m in mem_list], np.int32)
+    m_role = np.array(
+        [_node_role(m.process_node_nm, sensor_node, host_node,
+                    notes, f"memory {m.name!r}",
+                    prefer=(ROLE_HOST
+                            if m_off[k] or getattr(m, "layer", 0) >= 1
+                            else ROLE_SENSOR))
+         for k, m in enumerate(mem_list)], np.int32)
     m_node = np.array([float(m.process_node_nm) for m in mem_list])
-    # area uses hw.node_for_layer (layer-indexed), not the declared node
+    # area uses hw.node_for_layer (layer-indexed), not the declared node;
+    # the layer decides the role even when both layers were built at the
+    # same node (the soc_node==cis reference-structure case)
     m_area_role = np.array(
-        [ROLE_HOST if (len(hw.process_nodes) > 1 and m.layer >= 1
-                       and host_node != sensor_node) else ROLE_SENSOR
-         for m in mem_list], np.int32)
+        [ROLE_HOST if (len(hw.process_nodes) > 1 and m.layer >= 1)
+         else ROLE_SENSOR for m in mem_list], np.int32)
     m_tech = np.array([TECH_INDEX.get(m.technology, 0) for m in mem_list],
                       np.int32)
     nan = float("nan")

@@ -1,0 +1,418 @@
+"""Sharded, streaming mega-sweeps: ``evaluate_batch`` at >=1e7 points.
+
+The PR-1 engine scores one monolithic batch per structural variant on one
+device and returns N-row tables — fine at ~2e4 points, impossible at the
+production scale the ROADMAP asks for (the host meshgrid alone dies near
+1e7 points).  This module scales the same evaluator three ways:
+
+1. **Sharding** — :func:`evaluate_batch_sharded` splits the ``DesignPoints``
+   batch axis over a 1-D ``("batch",)`` device mesh
+   (``repro.launch.mesh.make_batch_mesh``) with ``shard_map``; batches are
+   padded to a device-divisible size and sliced back, so any batch size
+   works.  Validated on CPU via
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+2. **Streaming** — :func:`sweep_stream` walks arbitrary cartesian grids
+   through ``ChunkedGrid`` flat-index chunks (host memory O(chunk_size))
+   and evaluates every chunk through one AOT-compiled sharded executable
+   per variant.
+3. **On-device reduction** — each chunk folds into a bounded state that
+   never leaves the device: a running top-k by any output metric plus
+   per-variant min/mean/argmin/feasible-count summaries, with the wide
+   per-chunk reduction riding the Pallas ``block_stats`` kernel
+   (``repro.kernels.stream_reduce``).  Padding rows carry ``valid=False``
+   and are mask-excluded from feasibility, summaries and top-k.
+
+    res = sweep_stream("edgaze", grids, chunk_size=1 << 18, k=8)
+    res.topk[0]              # best design point (full row)
+    res.summaries["3d_in"]   # per-variant min / mean / argmin
+    res.points_per_sec       # warm streaming throughput
+
+Parity: each chunk matches the PR-1 ``evaluate_batch`` oracle (rel tol
+<= 1e-5 end-to-end vs the scalar path) and the top-k matches
+``SweepResult.best()`` on cross-checkable grids — asserted in
+tests/test_shard_sweep.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..kernels.stream_reduce import block_stats
+from ..launch.mesh import make_batch_mesh
+from .batch import DesignPoints, eval_fn, make_points
+from .plan import EnergyPlan
+from .sweep import (AXES, ChunkedGrid, _normalize_grids, lower_variant,
+                    variant_grid)
+
+_BATCH_SPEC = P("batch")
+_POINT_SPECS = DesignPoints(*([_BATCH_SPEC] * len(DesignPoints._fields)))
+
+
+def _mesh_key(mesh) -> tuple:
+    return (tuple(mesh.axis_names), tuple(d.id for d in mesh.devices.flat))
+
+
+def _sharded_fn(plan: EnergyPlan, mesh, keep: bool):
+    """The shard_map-wrapped evaluator (untraced) + its output keys."""
+    fn = eval_fn(plan)
+
+    def body(pts: DesignPoints):
+        return fn(pts, keep_unit_energies=keep)
+
+    probe = jax.eval_shape(body, make_points(plan, mesh.devices.size))
+    out_specs = {k: _BATCH_SPEC for k in probe}
+    return shard_map(body, mesh=mesh, in_specs=(_POINT_SPECS,),
+                     out_specs=out_specs), sorted(probe)
+
+
+def _sharded_exec(plan: EnergyPlan, mesh, batch: int, keep: bool):
+    """AOT-compiled sharded evaluator for one padded batch size.
+
+    Compilation is timed separately and cached on the plan, so sweeps
+    report warm throughput and recompile only on new (mesh, batch, flag)
+    combinations.  ``batch`` must be divisible by the mesh size.
+    """
+    if plan._exec_cache is None:
+        plan._exec_cache = {}
+    key = ("shard", _mesh_key(mesh), batch, keep)
+    hit = plan._exec_cache.get(key)
+    if hit is not None:
+        return hit, 0.0
+    fn, _keys = _sharded_fn(plan, mesh, keep)
+    t0 = time.perf_counter()
+    exe = jax.jit(fn).lower(make_points(plan, batch)).compile()
+    compile_s = time.perf_counter() - t0
+    plan._exec_cache[key] = exe
+    return exe, compile_s
+
+
+def pad_points(points: DesignPoints, multiple: int
+               ) -> Tuple[DesignPoints, int]:
+    """Pad the batch axis up to a multiple by repeating the last point.
+
+    Returns ``(padded_points, original_batch)``; callers either slice
+    outputs back to the original batch or mask the tail as invalid.
+    """
+    b = points.batch
+    pad = (-b) % max(multiple, 1)
+    if pad == 0:
+        return points, b
+    padded = DesignPoints(*(jnp.concatenate([x, jnp.repeat(x[-1:], pad, 0)])
+                            for x in points))
+    return padded, b
+
+
+def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
+                           mesh=None, keep_unit_energies: bool = False,
+                           timings: Optional[Dict[str, float]] = None
+                           ) -> Dict[str, np.ndarray]:
+    """``evaluate_batch`` with the batch axis sharded across a mesh.
+
+    Drop-in equal to the single-device path (exact same executable per
+    shard, so parity holds to f32 roundoff); pads internally to a
+    device-divisible batch and slices the padding back off.  ``timings``
+    accumulates ``compile_s``/``eval_s`` like ``evaluate_batch``.
+    """
+    if mesh is None:
+        mesh = make_batch_mesh()
+    padded, b = pad_points(points, mesh.devices.size)
+    exe, compile_s = _sharded_exec(plan, mesh, padded.batch,
+                                   bool(keep_unit_energies))
+    t0 = time.perf_counter()
+    out = exe(padded)
+    out = {k: np.asarray(v)[:b] for k, v in out.items()}
+    eval_s = time.perf_counter() - t0
+    if timings is not None:
+        timings["compile_s"] = timings.get("compile_s", 0.0) + compile_s
+        timings["eval_s"] = timings.get("eval_s", 0.0) + eval_s
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming reduction: bounded on-device state per variant
+# ---------------------------------------------------------------------------
+def _init_state(k: int, n_out: int) -> Dict[str, jnp.ndarray]:
+    return dict(
+        topk_v=jnp.full((k,), jnp.inf, jnp.float32),
+        topk_i=jnp.full((k,), -1, jnp.int32),
+        topk_out=jnp.zeros((k, n_out), jnp.float32),
+        n=jnp.zeros((), jnp.int32),
+        n_feasible=jnp.zeros((), jnp.int32),
+        metric_sum=jnp.zeros((), jnp.float32),
+        metric_min=jnp.asarray(jnp.inf, jnp.float32),
+        argmin=jnp.asarray(-1, jnp.int32),
+    )
+
+
+def _make_stream_step(plan: EnergyPlan, mesh, metric: str, k: int,
+                      chunk: int, block_points: int):
+    """One jitted chunk step: sharded eval + on-device fold into state.
+
+    The returned callable maps ``(points[chunk], valid[chunk],
+    base_index, state) -> state``; nothing per-point ever reaches the
+    host.  The whole wide reduction — Pallas block stats AND the local
+    top-k — runs INSIDE the shard body on each device's slice, so only
+    O(k + chunk/block_points) partials per shard cross the mesh; the
+    outer merge touches tiny arrays.  Compiled AOT by the caller, which
+    reports compile vs eval time separately.
+    """
+    fn = eval_fn(plan)
+    ndev = int(mesh.devices.size)
+    assert chunk % ndev == 0, (chunk, ndev)
+    shard = chunk // ndev
+    bp = min(block_points, shard)
+    kk = min(k, shard)          # per-shard candidates (bounded by shard)
+    # the running state keeps the FULL k: the true top-k accumulates
+    # across chunks, so truncating to the chunk size would drop ranks
+    probe = jax.eval_shape(lambda p: fn(p, keep_unit_energies=False),
+                           make_points(plan, ndev))
+    out_keys = sorted(probe)
+    if metric not in out_keys:
+        raise KeyError(f"unknown stream metric {metric!r}; valid: "
+                       f"{out_keys}")
+
+    def shard_body(pts: DesignPoints, valid: jnp.ndarray):
+        out = fn(pts, keep_unit_energies=False)
+        ok = out["feasible"].astype(bool) & valid
+        metric_v = out[metric].astype(jnp.float32)
+        vals = jnp.where(ok, metric_v, jnp.inf)
+        offset = (jax.lax.axis_index("batch") * shard).astype(jnp.int32)
+
+        # per-shard summary partials: Pallas segment-min/sum
+        mins, amins, sums, counts = block_stats(metric_v, ok,
+                                                block_points=bp)
+        amin_i = (offset + jnp.arange(len(mins), dtype=jnp.int32) * bp
+                  + amins)
+
+        # per-shard top-k candidates (ascending; invalids are +inf)
+        neg, pos = jax.lax.top_k(-vals, kk)
+        return dict(
+            cand_v=-neg,
+            cand_i=offset + pos.astype(jnp.int32),
+            cand_out=jnp.stack([out[key][pos].astype(jnp.float32)
+                                for key in out_keys], axis=1),
+            mins=mins, amin_i=amin_i, sums=sums, counts=counts,
+            n_valid=jnp.sum(valid.astype(jnp.int32))[None],
+        )
+
+    partial_keys = ("cand_v", "cand_i", "cand_out", "mins",
+                    "amin_i", "sums", "counts", "n_valid")
+    sharded = jax.jit(shard_map(shard_body, mesh=mesh,
+                                in_specs=(_POINT_SPECS, _BATCH_SPEC),
+                                out_specs={key: _BATCH_SPEC
+                                           for key in partial_keys}))
+
+    # NOTE: the merge is deliberately a SEPARATE jit.  Fusing it into the
+    # sharded program makes GSPMD partition the whole step around the
+    # tiny replicated update and roughly doubles the per-chunk wall time
+    # (measured on the 8-device forced-host CPU mesh); as its own program
+    # it costs microseconds on O(ndev * (k+G)) partials.
+    def merge(c: Dict[str, jnp.ndarray], base_index: jnp.ndarray,
+              state: Dict[str, jnp.ndarray]):
+        g = jnp.argmin(c["mins"])
+        c_min = c["mins"][g]
+        c_arg = c["amin_i"][g]
+        merged_v = jnp.concatenate([state["topk_v"], c["cand_v"]])
+        neg2, sel = jax.lax.top_k(-merged_v, k)
+        return dict(
+            topk_v=-neg2,
+            topk_i=jnp.concatenate(
+                [state["topk_i"], base_index + c["cand_i"]])[sel],
+            topk_out=jnp.concatenate([state["topk_out"],
+                                      c["cand_out"]])[sel],
+            n=state["n"] + jnp.sum(c["n_valid"]),
+            n_feasible=state["n_feasible"]
+            + jnp.sum(c["counts"]).astype(jnp.int32),
+            metric_sum=state["metric_sum"] + jnp.sum(c["sums"]),
+            metric_min=jnp.minimum(state["metric_min"], c_min),
+            argmin=jnp.where(c_min < state["metric_min"],
+                             base_index + c_arg, state["argmin"]),
+        )
+
+    return sharded, jax.jit(merge, donate_argnums=(2,)), out_keys
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Bounded result of a streaming mega-sweep.
+
+    ``topk`` rows are ascending by the stream metric and carry the exact
+    grid axis values (f64, reconstructed from the flat index) plus every
+    model output (f32, gathered on device).  ``summaries`` maps variant ->
+    ``{n, n_feasible, metric_min, metric_mean, argmin_index,
+    argmin_point}`` where the mean is over feasible points only.
+    """
+    algorithm: str
+    metric: str
+    k: int
+    n_points: int
+    n_feasible: int
+    n_devices: int
+    chunk_size: int
+    topk: List[Dict]
+    summaries: Dict[str, Dict]
+    wall_s: float = 0.0
+    compile_s: float = 0.0
+    eval_s: float = 0.0
+
+    @property
+    def points_per_sec(self) -> float:
+        """Warm streaming throughput (compilation excluded)."""
+        return self.n_points / max(self.eval_s, 1e-12)
+
+    def best(self, k: Optional[int] = None) -> List[Dict]:
+        """Top-k rows by the stream metric (ascending), feasible only."""
+        return self.topk[:k]
+
+
+def sweep_stream(algorithm: str = "edgaze",
+                 grids: Optional[Dict[str, Sequence]] = None, *,
+                 soc_node: int = 22, chunk_size: int = 1 << 18,
+                 metric: str = "total_j", k: int = 16, mesh=None,
+                 block_points: int = 4096,
+                 progress: Optional[Callable[[int, int], None]] = None
+                 ) -> StreamResult:
+    """Stream a cartesian sweep of any size through bounded memory.
+
+    Same ``grids`` contract as ``sweep()`` (``variant`` + numeric axes;
+    missing axes default per variant), but the full result table is never
+    built: each ``chunk_size`` slice of the grid is evaluated sharded
+    across ``mesh`` (default: all visible devices) and reduced on device
+    into a running top-k by ``metric`` plus per-variant summaries.  Host
+    memory is O(chunk_size); device state is O(k).
+
+    Chunk-size guidance: pick a power of two large enough to amortize
+    dispatch (~1e5-1e6 points; the default 1<<18 sustains >~80 % of peak
+    on CPU hosts) — it is rounded up to a device-divisible size and every
+    chunk (including the grid tail) is padded to exactly that shape, so
+    each variant compiles ONE executable.  ``progress(done, total)`` is
+    invoked after every chunk.
+    """
+    t_start = time.perf_counter()
+    if mesh is None:
+        mesh = make_batch_mesh()
+    ndev = int(mesh.devices.size)
+    chunk = -(-max(int(chunk_size), 1) // ndev) * ndev
+    variants, grids = _normalize_grids(algorithm, grids)
+    timings = {"compile_s": 0.0, "eval_s": 0.0}
+
+    plans: Dict[str, EnergyPlan] = {}
+    vgrids: Dict[str, ChunkedGrid] = {}
+    states: Dict[str, Dict] = {}
+    out_keys: List[str] = []
+    n_var: Optional[int] = None
+    for variant in variants:
+        plan = lower_variant(algorithm, variant, soc_node=soc_node)
+        grid = variant_grid(plan, grids)
+        if n_var is None:
+            n_var = len(grid)
+        assert len(grid) == n_var, (variant, len(grid), n_var)
+        plans[variant], vgrids[variant] = plan, grid
+    total = n_var * len(variants)
+    if total * 1.0 >= 2 ** 31:
+        raise ValueError(f"{total} points overflow int32 stream indices")
+
+    done = 0
+    for vi, variant in enumerate(variants):
+        plan, grid = plans[variant], vgrids[variant]
+        t0 = time.perf_counter()
+        if plan._exec_cache is None:
+            plan._exec_cache = {}
+        cache_key = ("stream", _mesh_key(mesh), chunk, metric, k,
+                     block_points)
+        hit = plan._exec_cache.get(cache_key)
+        if hit is not None:
+            compiled_body, merge, out_keys = hit
+            state = _init_state(k, len(out_keys))
+        else:
+            body, merge, out_keys = _make_stream_step(
+                plan, mesh, metric, k, chunk, block_points)
+            state = _init_state(k, len(out_keys))
+            example = (make_points(plan, chunk), jnp.zeros((chunk,), bool))
+            compiled_body = body.lower(*example).compile()
+            # Warm the merge jit on real sharded partials so its compiles
+            # (initial-state sharding, then steady-state sharding) land in
+            # compile_s, not in the first chunks' eval time.  An
+            # all-invalid chunk is a semantic no-op on the state, so
+            # warming mutates nothing: counts are 0 and every candidate
+            # metric is +inf.
+            c0 = compiled_body(*example)
+            state = merge(c0, jnp.int32(0), state)
+            state = merge(c0, jnp.int32(0), state)
+            jax.block_until_ready(state["n"])
+            plan._exec_cache[cache_key] = (compiled_body, merge, out_keys)
+        timings["compile_s"] += time.perf_counter() - t0
+
+        base = vi * n_var
+        t0 = time.perf_counter()
+        inflight: List = []
+        for start, flat in grid.chunks(chunk):
+            n = len(flat[AXES[0]])
+            if n < chunk:                      # grid tail: pad + mask
+                flat = {ax: np.concatenate(
+                    [v, np.full(chunk - n, v[-1])]) for ax, v in flat.items()}
+            points = make_points(plan, chunk, **flat)
+            valid = jnp.arange(chunk) < n
+            c = compiled_body(points, valid)
+            state = merge(c, jnp.int32(base + start), state)
+            # keep a couple of chunks in flight so the next chunk's host
+            # prep (unravel/pad/make_points) overlaps device execution,
+            # without letting dispatch run unboundedly ahead of it; pace
+            # on the body partials — the state itself is donated to the
+            # next merge and cannot be blocked on
+            inflight.append(c["n_valid"])
+            if len(inflight) > 2:
+                jax.block_until_ready(inflight.pop(0))
+            done += n
+            if progress is not None:
+                progress(done, total)
+        jax.block_until_ready(state["n"])
+        timings["eval_s"] += time.perf_counter() - t0
+        states[variant] = jax.device_get(state)
+
+    # ----- host-side finalization (all O(k) / O(variants)) ----------------
+    summaries: Dict[str, Dict] = {}
+    n_feasible = 0
+    for variant in variants:
+        st, grid = states[variant], vgrids[variant]
+        nf = int(st["n_feasible"])
+        n_feasible += nf
+        amin = int(st["argmin"])
+        summaries[variant] = dict(
+            n=int(st["n"]), n_feasible=nf,
+            metric_min=float(st["metric_min"]),
+            metric_mean=(float(st["metric_sum"]) / nf if nf
+                         else float("nan")),
+            argmin_index=amin % n_var if amin >= 0 else -1,
+            argmin_point=(grid.point(amin % n_var) if amin >= 0 else None))
+
+    rows: List[Dict] = []
+    all_v = np.concatenate([states[v]["topk_v"] for v in variants])
+    all_i = np.concatenate([states[v]["topk_i"] for v in variants])
+    all_out = np.concatenate([states[v]["topk_out"] for v in variants])
+    all_var = np.repeat(np.arange(len(variants)),
+                        [len(states[v]["topk_v"]) for v in variants])
+    for j in np.argsort(all_v, kind="stable")[:k]:
+        if not np.isfinite(all_v[j]):
+            break                              # fewer than k feasible points
+        variant = variants[int(all_var[j])]
+        local = int(all_i[j]) - int(all_var[j]) * n_var
+        row = dict(variant=variant, index=local,
+                   **vgrids[variant].point(local))
+        row.update({key: float(all_out[j][c])
+                    for c, key in enumerate(out_keys)})
+        rows.append(row)
+
+    return StreamResult(
+        algorithm=algorithm, metric=metric, k=k, n_points=total,
+        n_feasible=n_feasible, n_devices=ndev, chunk_size=chunk,
+        topk=rows, summaries=summaries,
+        wall_s=time.perf_counter() - t_start,
+        compile_s=timings["compile_s"], eval_s=timings["eval_s"])

@@ -2,8 +2,8 @@
 
 ``sweep()`` is the architectural-exploration front door the paper promises
 (Sec. 6): give it an algorithm ("edgaze" / "rhythmic") and per-axis value
-grids, and it scores the full cartesian product — thousands to hundreds of
-thousands of design points — with one lowering + one jit'd device call per
+grids, and it scores the full cartesian product — thousands to millions of
+design points — with one lowering + one compiled device call per
 structural variant.  The scalar ``estimate_energy`` path stays available
 as the reference oracle via :func:`scalar_point`.
 
@@ -12,12 +12,21 @@ as the reference oracle via :func:`scalar_point`.
                            "frame_rate": [15, 30, 60],
                            "sys_rows": [8, 16, 32]})
     best = res.best("total_j")
+
+Grids are walked through :class:`ChunkedGrid` — flat-index unraveling, so
+the full cartesian product is never materialized on host.  Pass
+``chunk_size=`` to bound the per-call batch (host memory stays O(chunk)
+during evaluation; the returned tables are still O(N)) and ``mesh=`` (a
+1-D ``("batch",)`` mesh, see ``repro.launch.mesh.make_batch_mesh``) to
+shard each batch across devices.  For sweeps too large to return N-row
+tables at all (>= 1e7 points), use ``repro.core.shard_sweep.sweep_stream``
+— same grids, bounded streaming result.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,7 +34,8 @@ from .batch import (TECH_DECLARED, evaluate_batch, make_points,
                     point_defaults)
 from .digital import SystolicArray
 from .energy import estimate_energy, reference_outputs
-from .plan import CATEGORIES, EnergyPlan, TECH_INDEX, lower
+from .plan import (CATEGORIES, EnergyPlan, TECH_INDEX, _EXTRA_CACHES,
+                   count_cache_hit, lower)
 from .usecases.edgaze import EDGAZE_VARIANTS, build_edgaze
 from .usecases.rhythmic import RHYTHMIC_VARIANTS, build_rhythmic
 
@@ -59,22 +69,79 @@ def _algorithm(name: str):
     return ALGORITHMS[name]
 
 
+class ChunkedGrid:
+    """Lazy cartesian product over named axis value lists.
+
+    Equivalent to ``np.meshgrid(*values, indexing="ij")`` flattened in C
+    order, but points are materialized per chunk from flat indices via
+    ``np.unravel_index`` — host memory is O(chunk_size), never O(N).  The
+    old meshgrid path allocated ``len(axes)`` float64 arrays of the full
+    product size twice over and died around ~1e7 points.
+    """
+
+    def __init__(self, axes: Dict[str, Sequence]):
+        self.names: List[str] = list(axes)
+        self.values: List[np.ndarray] = [
+            np.atleast_1d(np.asarray(v, np.float64)).reshape(-1)
+            for v in axes.values()]
+        self.shape: Tuple[int, ...] = tuple(len(v) for v in self.values)
+        self.n_points: int = int(np.prod(self.shape)) if self.shape else 0
+
+    def __len__(self) -> int:
+        return self.n_points
+
+    def chunk(self, start: int, stop: int) -> Dict[str, np.ndarray]:
+        """Axis values for flat grid indices ``[start, stop)``."""
+        idx = np.arange(start, min(stop, self.n_points))
+        multi = np.unravel_index(idx, self.shape)
+        return {n: v[m] for n, v, m in zip(self.names, self.values, multi)}
+
+    def point(self, i: int) -> Dict[str, float]:
+        """Axis values of one flat grid index."""
+        multi = np.unravel_index(int(i), self.shape)
+        return {n: float(v[m])
+                for n, v, m in zip(self.names, self.values, multi)}
+
+    def chunks(self, chunk_size: Optional[int]
+               ) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        """Yield ``(start, axis-values)`` walking the grid in order."""
+        step = self.n_points if chunk_size is None else int(chunk_size)
+        step = max(step, 1)
+        for start in range(0, self.n_points, step):
+            yield start, self.chunk(start, start + step)
+
+
 @dataclasses.dataclass
 class SweepResult:
     algorithm: str
     params: Dict[str, np.ndarray]        # per-point axis values (+ variant)
     outputs: Dict[str, np.ndarray]       # per-point model outputs
     variant_meta: Dict[str, Dict]        # variant -> plan metadata
-    wall_s: float = 0.0
+    wall_s: float = 0.0                  # total front-door wall time
+    compile_s: float = 0.0               # AOT lowering + XLA compilation
+    eval_s: float = 0.0                  # device execution + host transfer
 
     def __len__(self) -> int:
         return len(self.outputs["total_j"])
 
     def select(self, **filters) -> np.ndarray:
-        """Boolean mask of points matching exact param values."""
+        """Boolean mask of points matching the given param values.
+
+        Numeric axes match with ``np.isclose`` (grid values round-trip
+        through f32 on device and through float arithmetic when grids are
+        generated, so exact ``==`` silently returns an empty mask);
+        ``variant`` and the categorical ``mem_tech`` codes stay exact.
+        """
         mask = np.ones(len(self), bool)
         for k, v in filters.items():
-            mask &= self.params[k] == v
+            col = self.params[k]
+            if k == "mem_tech":
+                mask &= col == _tech_code(v)
+            elif k == "variant" or not np.issubdtype(col.dtype, np.number):
+                mask &= col == v
+            else:
+                mask &= np.isclose(col.astype(np.float64), float(v),
+                                   rtol=1e-6, atol=1e-12)
         return mask
 
     def row(self, i: int) -> Dict:
@@ -100,29 +167,41 @@ def build_variant(algorithm: str, variant: str, *, cis_node: int = 65,
     return build(variant, cis_node=cis_node, soc_node=soc_node)
 
 
+_VARIANT_CACHE: Dict[tuple, EnergyPlan] = {}
+_EXTRA_CACHES.append(_VARIANT_CACHE)     # flushed by lower_cache_clear()
+
+
 def lower_variant(algorithm: str, variant: str, *,
                   soc_node: int = 22) -> EnergyPlan:
     """Lower one structural variant (cached on the structural signature).
 
-    The structure is built at a fixed reference CIS node; the node axes are
-    swept numerically by the evaluator, so the cache hits for any grid.
+    The structure is built at the fixed reference CIS node — independent
+    of the user's ``soc_node`` — and the node axes are swept numerically
+    by the evaluator, so the cache hits for any grid.  The ``soc_node ==
+    65`` collision with the reference node is handled inside ``lower``
+    (node roles tie-break on die layer / off-sensor facts), not by
+    silently rebuilding the structure at a different reference node,
+    which used to shift structure-derived defaults for that one value.
+
+    Builders are deterministic in ``(algorithm, variant, soc_node)``, so
+    the plan is also memoized on that triple to keep rebuilding the
+    Python structure + signing it off the per-chunk sweep hot path
+    (``lower``'s own structural cache still deduplicates across callers).
     """
-    ref = _REF_CIS_NODE if soc_node != _REF_CIS_NODE else 130
-    hw, stages, mapping, _meta = build_variant(
-        algorithm, variant, cis_node=ref, soc_node=soc_node)
-    return lower(hw, stages, mapping)
+    key = (algorithm, variant, int(soc_node))
+    plan = _VARIANT_CACHE.get(key)
+    if plan is None:
+        hw, stages, mapping, _meta = build_variant(
+            algorithm, variant, cis_node=_REF_CIS_NODE, soc_node=soc_node)
+        plan = _VARIANT_CACHE[key] = lower(hw, stages, mapping)
+    else:
+        count_cache_hit()
+    return plan
 
 
-def sweep(algorithm: str = "edgaze",
-          grids: Optional[Dict[str, Sequence]] = None, *,
-          soc_node: int = 22, strict: bool = False) -> SweepResult:
-    """Score the cartesian product of the given parameter grids.
-
-    ``grids`` maps axis names (``variant`` + :data:`AXES`) to value lists;
-    missing axes default to the values each variant was built with.  One
-    batched device call per structural variant.
-    """
-    t0 = time.perf_counter()
+def _normalize_grids(algorithm: str, grids: Optional[Dict[str, Sequence]]
+                     ) -> Tuple[List[str], Dict[str, Sequence]]:
+    """Split the variant axis off and map mem_tech names to codes."""
     grids = dict(grids or {})
     _build, all_variants = _algorithm(algorithm)
     variants = [str(v) for v in grids.pop("variant", all_variants)]
@@ -132,48 +211,92 @@ def sweep(algorithm: str = "edgaze",
                        f"['variant'] + {list(AXES)}")
     if "mem_tech" in grids:
         grids["mem_tech"] = [_tech_code(v) for v in grids["mem_tech"]]
+    return variants, grids
+
+
+def variant_grid(plan: EnergyPlan, grids: Dict[str, Sequence]) -> ChunkedGrid:
+    """The :class:`ChunkedGrid` one variant sweeps (defaults fill gaps)."""
+    defaults = point_defaults(plan)
+    return ChunkedGrid({ax: grids.get(ax, [defaults[ax]]) for ax in AXES})
+
+
+def _variant_meta(plan: EnergyPlan) -> Dict:
+    return dict(
+        hw_name=plan.hw_name, notes=plan.notes,
+        stall_notes=plan.stall_notes,
+        categories_present=[CATEGORIES[c]
+                            for c in sorted(set(plan.unit_category))],
+        num_units=plan.num_units)
+
+
+def sweep(algorithm: str = "edgaze",
+          grids: Optional[Dict[str, Sequence]] = None, *,
+          soc_node: int = 22, strict: bool = False,
+          chunk_size: Optional[int] = None, mesh=None) -> SweepResult:
+    """Score the cartesian product of the given parameter grids.
+
+    ``grids`` maps axis names (``variant`` + :data:`AXES`) to value lists;
+    missing axes default to the values each variant was built with.  One
+    compiled device call per structural variant per chunk.
+
+    ``chunk_size`` bounds the per-call batch: the grid is walked lazily
+    (no full meshgrid on host) and each chunk is evaluated through one
+    compiled executable, so peak evaluation memory is O(chunk_size).
+    Pick a power-of-two chunk (e.g. 1 << 18) large enough to amortize
+    dispatch; non-divisible tails compile a second (smaller) executable.
+    ``mesh``, if given, is a 1-D ``("batch",)`` device mesh
+    (``repro.launch.mesh.make_batch_mesh``) and every chunk is sharded
+    across its devices, padding internally to a divisible batch.
+
+    The result's ``compile_s``/``eval_s`` report compilation and warm
+    evaluation separately — ``wall_s`` alone made first-call throughput
+    look arbitrarily bad and BENCH numbers depend on call order.
+    """
+    t0 = time.perf_counter()
+    variants, grids = _normalize_grids(algorithm, grids)
+    if mesh is not None:
+        from .shard_sweep import evaluate_batch_sharded
 
     params: Dict[str, List] = {k: [] for k in ("variant",) + AXES}
     outputs: Dict[str, List] = {}
     variant_meta: Dict[str, Dict] = {}
+    timings = {"compile_s": 0.0, "eval_s": 0.0}
 
     for variant in variants:
         plan = lower_variant(algorithm, variant, soc_node=soc_node)
         if strict and plan.stall_notes:
             raise ValueError("pipeline stalls detected: "
                              + "; ".join(plan.stall_notes))
-        defaults = point_defaults(plan)
-        axis_vals = [np.atleast_1d(np.asarray(grids.get(ax, [defaults[ax]]),
-                                              np.float64))
-                     for ax in AXES]
-        mesh = np.meshgrid(*axis_vals, indexing="ij")
-        flat = {ax: m.reshape(-1) for ax, m in zip(AXES, mesh)}
-        n = len(flat[AXES[0]])
-        points = make_points(plan, n, **flat)
-        out = evaluate_batch(plan, points)
-        if strict and not bool(out["feasible"].all()):
-            bad = int((~out["feasible"].astype(bool)).sum())
-            raise ValueError(
-                f"{variant}: {bad}/{n} design points cannot meet the frame "
-                f"rate (T_D >= T_FR, Sec. 4.1)")
-        params["variant"] += [variant] * n
-        for ax in AXES:
-            params[ax] += list(flat[ax])
-        for k, v in out.items():
-            outputs.setdefault(k, []).append(v)
-        variant_meta[variant] = dict(
-            hw_name=plan.hw_name, notes=plan.notes,
-            stall_notes=plan.stall_notes,
-            categories_present=[CATEGORIES[c]
-                                for c in sorted(set(plan.unit_category))],
-            num_units=plan.num_units)
+        grid = variant_grid(plan, grids)
+        for _start, flat in grid.chunks(chunk_size):
+            n = len(flat[AXES[0]])
+            points = make_points(plan, n, **flat)
+            if mesh is not None:
+                out = evaluate_batch_sharded(plan, points, mesh=mesh,
+                                             timings=timings)
+            else:
+                out = evaluate_batch(plan, points, timings=timings)
+            if strict and not bool(out["feasible"].all()):
+                bad = int((~out["feasible"].astype(bool)).sum())
+                raise ValueError(
+                    f"{variant}: {bad}/{n} design points cannot meet the "
+                    f"frame rate (T_D >= T_FR, Sec. 4.1)")
+            params["variant"].append(np.full(n, variant, object))
+            for ax in AXES:
+                params[ax].append(flat[ax])
+            for k, v in out.items():
+                outputs.setdefault(k, []).append(v)
+        variant_meta[variant] = _variant_meta(plan)
 
     return SweepResult(
         algorithm=algorithm,
-        params={k: np.asarray(v) for k, v in params.items()},
+        params={k: np.concatenate(v) if k != "variant"
+                else np.concatenate(v).astype(str)
+                for k, v in params.items()},
         outputs={k: np.concatenate(v) for k, v in outputs.items()},
         variant_meta=variant_meta,
-        wall_s=time.perf_counter() - t0)
+        wall_s=time.perf_counter() - t0,
+        compile_s=timings["compile_s"], eval_s=timings["eval_s"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,13 @@
 """Run the Sec. 6 studies: energy tables (Fig. 9/11) + power density (Tbl. 3).
 
-``run_study`` now rides the batched energy engine: each structural variant
-is lowered once (``repro.core.plan``) and all requested CIS nodes are
-scored in a single jit'd device call (``repro.core.batch``).  The scalar
-walk survives as ``engine="scalar"`` — it is the reference oracle the
-parity tests hold the batched path against.
+``run_study`` rides the batched energy engine: each structural variant is
+lowered once (``repro.core.plan``) and all requested CIS nodes are scored
+in a single compiled device call (``repro.core.batch``), walked through
+the chunked-grid sweep front door — pass ``chunk_size=`` / ``mesh=``
+through to shard the evaluation across devices exactly like any other
+sweep (``repro.core.shard_sweep``).  The scalar walk survives as
+``engine="scalar"`` — it is the reference oracle the parity tests hold
+the batched path against.
 """
 from __future__ import annotations
 
@@ -34,12 +37,16 @@ def _variants(algorithm: str):
 
 
 def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
-              strict: bool = False, engine: str = "batched") -> List[Dict]:
+              strict: bool = False, engine: str = "batched",
+              chunk_size=None, mesh=None) -> List[Dict]:
     """Evaluate every variant x CIS node for one algorithm.
 
     Returns rows with total energy, category breakdown and power density.
     ``engine="batched"`` (default) scores all cells in one device call per
     variant; ``engine="scalar"`` walks the Python stage objects per cell.
+    ``chunk_size``/``mesh`` pass through to ``sweep()`` for chunked /
+    device-sharded evaluation (irrelevant at study sizes, but the study
+    rides the same code path the mega-sweeps exercise).
     """
     if engine == "scalar":
         return _run_study_scalar(algorithm, cis_nodes, soc_node, strict)
@@ -47,7 +54,8 @@ def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
     from ..sweep import sweep  # local import: sweep builds on the use-cases
     res = sweep(algorithm, {"variant": list(_variants(algorithm)),
                             "cis_node": list(cis_nodes)},
-                soc_node=soc_node, strict=strict)
+                soc_node=soc_node, strict=strict,
+                chunk_size=chunk_size, mesh=mesh)
     rows = []
     for node in cis_nodes:
         for variant in _variants(algorithm):

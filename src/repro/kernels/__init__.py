@@ -12,7 +12,8 @@ from .frame_event import frame_event
 from .matmul import matmul
 from .runtime import kernel_mode, on_tpu, resolve_interpret
 from .stencil_conv import stencil_conv
+from .stream_reduce import block_stats, masked_stats
 
-__all__ = ["ops", "ref", "binning", "category_reduce", "flash_attention",
-           "frame_event", "kernel_mode", "matmul", "on_tpu",
-           "resolve_interpret", "stencil_conv"]
+__all__ = ["ops", "ref", "binning", "block_stats", "category_reduce",
+           "flash_attention", "frame_event", "kernel_mode", "masked_stats",
+           "matmul", "on_tpu", "resolve_interpret", "stencil_conv"]

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: segment (per-block) min/argmin/sum/count for the
+streaming mega-sweep reducer.
+
+A >=1e7-point sweep cannot return N-row tables; ``repro.core.shard_sweep``
+streams chunks through the batched evaluator and folds each chunk into a
+bounded on-device state (running top-k + per-variant summaries).  The
+first reduction stage rides this kernel: the chunk's metric vector is
+tiled into blocks along the design-point axis (same row-strip idiom as
+``category_reduce``/``stencil_conv``) and each block emits its masked
+min, argmin, sum and valid count.  The tiny [G]-sized partials are then
+combined by plain jnp ops — a segment-min tree with Pallas doing the
+wide leg.
+
+Masking: padding rows (non-divisible chunks) and infeasible design points
+carry ``mask=0``; they contribute +inf to the min and nothing to the
+sum/count, so streamed summaries are exactly the summaries of the valid
+points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .runtime import resolve_interpret
+
+
+def _stats_kernel(v_ref, m_ref, s_ref, a_ref):
+    v = v_ref[...].astype(jnp.float32)
+    m = m_ref[...] != 0
+    masked = jnp.where(m, v, jnp.inf)
+    s_ref[0, 0] = jnp.min(masked)
+    s_ref[0, 1] = jnp.sum(jnp.where(m, v, 0.0))
+    s_ref[0, 2] = jnp.sum(m.astype(jnp.float32))
+    a_ref[0, 0] = jnp.argmin(masked).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_points", "interpret"))
+def block_stats(values: jax.Array, mask: jax.Array,
+                block_points: int = 4096, interpret: bool = None):
+    """Per-block masked stats over a ``[B]`` metric vector.
+
+    Returns ``(mins, argmins, sums, counts)``, each ``[G]`` with
+    ``G = ceil(B / block_points)``; ``argmins`` are block-relative (add
+    ``g * block_points`` for the global index).  All-masked blocks yield
+    ``min=+inf`` and ``count=0``.
+    """
+    (b,) = values.shape
+    assert mask.shape == (b,), (values.shape, mask.shape)
+    block_points = max(min(block_points, b), 1)
+    pad = (-b) % block_points
+    if pad:
+        values = jnp.pad(values, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    g = (b + pad) // block_points
+    stats, amin = pl.pallas_call(
+        _stats_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, block_points), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_points), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, 3), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(values.astype(jnp.float32).reshape(g, block_points),
+      mask.astype(jnp.int32).reshape(g, block_points))
+    return stats[:, 0], amin[:, 0], stats[:, 1], stats[:, 2]
+
+
+def masked_stats(values: jax.Array, mask: jax.Array,
+                 block_points: int = 4096):
+    """Global ``{min, argmin, sum, count}`` of the masked ``[B]`` vector.
+
+    The wide reduction rides :func:`block_stats`; only the ``[G]``
+    partials are folded here.  ``argmin`` is a global index into
+    ``values`` (undefined when ``count == 0`` — callers guard on it).
+    """
+    mins, amins, sums, counts = block_stats(values, mask,
+                                            block_points=block_points)
+    g = jnp.argmin(mins)
+    return dict(min=mins[g],
+                argmin=(g * block_points + amins[g]).astype(jnp.int32),
+                sum=jnp.sum(sums),
+                count=jnp.sum(counts))

@@ -37,6 +37,27 @@ def make_production_mesh(*, multi_pod: bool = False):
                      axis_types=auto_axis_types(len(axes)))
 
 
+def make_batch_mesh(num_devices: Optional[int] = None):
+    """1-D ``("batch",)`` mesh for sharding design-space sweeps.
+
+    The sweep batch axis is embarrassingly parallel, so the mesh is a flat
+    strip over every visible device (or the first ``num_devices`` of
+    them — the sweep scaling bench uses subsets).  On CPU hosts, validate
+    multi-device behavior by setting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before the
+    first jax import (tests/test_shard_sweep.py style).
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else int(num_devices)
+    if n < 1 or n > len(devices):
+        raise RuntimeError(
+            f"batch mesh wants {n} devices but {len(devices)} are visible "
+            f"— force more with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=<n>")
+    return make_mesh((n,), ("batch",), devices=devices[:n],
+                     axis_types=auto_axis_types(1))
+
+
 def make_host_mesh(data: Optional[int] = None, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())

@@ -1,0 +1,232 @@
+"""Sharded, streaming mega-sweep engine (repro.core.shard_sweep).
+
+In-process tests cover the pieces that don't need a multi-device runtime:
+the lazy ChunkedGrid walker, chunked-vs-monolithic sweep equality
+(including non-divisible chunk sizes), the Pallas block-stats kernel, and
+single-device streaming vs ``SweepResult.best()``.
+
+The multi-device half runs in a subprocess (test_multidevice.py style —
+the device-count XLA flag must precede jax init) on an 8-device forced
+host platform: sharded-vs-unsharded parity at a non-divisible batch,
+chunked+sharded sweep equality, and streaming top-k / summaries against
+the monolithic oracle.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------------------
+# ChunkedGrid: lazy walker == the old meshgrid semantics
+# ---------------------------------------------------------------------------
+def test_chunked_grid_matches_meshgrid_order():
+    from repro.core.sweep import ChunkedGrid
+    axes = {"a": [1.0, 2.0, 3.0], "b": [10.0, 20.0], "c": [5.0]}
+    grid = ChunkedGrid(axes)
+    assert len(grid) == 6
+    mesh = np.meshgrid(*axes.values(), indexing="ij")
+    flat = {name: m.reshape(-1) for name, m in zip(axes, mesh)}
+    whole = grid.chunk(0, len(grid))
+    for name in axes:
+        np.testing.assert_array_equal(whole[name], flat[name])
+    # chunked walk re-assembles to the same arrays, any chunk size
+    for cs in (1, 2, 4, 5, 6, 100):
+        parts = [c for _s, c in grid.chunks(cs)]
+        for name in axes:
+            np.testing.assert_array_equal(
+                np.concatenate([p[name] for p in parts]), flat[name])
+    # single-point lookup agrees with the flattened order
+    for i in range(len(grid)):
+        assert grid.point(i) == {n: float(flat[n][i]) for n in axes}
+
+
+def test_chunked_sweep_equals_monolithic_nondivisible():
+    from repro.core.sweep import sweep
+    grids = {"variant": ["2d_in"], "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0], "sys_rows": [8.0, 16.0]}
+    mono = sweep("rhythmic", grids)
+    assert len(mono) == 12
+    for cs in (5, 12, 64):        # non-divisible, exact, oversized
+        chunked = sweep("rhythmic", grids, chunk_size=cs)
+        for key in mono.outputs:
+            np.testing.assert_array_equal(chunked.outputs[key],
+                                          mono.outputs[key], err_msg=key)
+        for key in mono.params:
+            np.testing.assert_array_equal(chunked.params[key],
+                                          mono.params[key], err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Pallas block-stats kernel (the streaming reducer's wide leg)
+# ---------------------------------------------------------------------------
+def test_block_stats_matches_numpy_masked():
+    import jax.numpy as jnp
+    from repro.kernels import block_stats
+    rng = np.random.default_rng(0)
+    b, bp = 1000, 128                      # forces padding (1000 % 128 != 0)
+    vals = rng.normal(size=b).astype(np.float32)
+    mask = rng.uniform(size=b) > 0.3
+    mins, amins, sums, counts = map(np.asarray, block_stats(
+        jnp.asarray(vals), jnp.asarray(mask), block_points=bp))
+    g = int(np.ceil(b / bp))
+    assert mins.shape == (g,)
+    for i in range(g):
+        sl = slice(i * bp, min((i + 1) * bp, b))
+        v, m = vals[sl], mask[sl]
+        if m.any():
+            masked = np.where(m, v, np.inf)
+            assert mins[i] == masked.min()
+            assert amins[i] == masked.argmin()
+            np.testing.assert_allclose(sums[i], v[m].sum(), rtol=1e-5)
+            assert counts[i] == m.sum()
+        else:
+            assert np.isinf(mins[i]) and counts[i] == 0
+
+
+def test_masked_stats_global_fold():
+    import jax.numpy as jnp
+    from repro.kernels import masked_stats
+    rng = np.random.default_rng(1)
+    vals = rng.normal(size=777).astype(np.float32)
+    mask = rng.uniform(size=777) > 0.5
+    st = {k: np.asarray(v) for k, v in masked_stats(
+        jnp.asarray(vals), jnp.asarray(mask), block_points=64).items()}
+    masked = np.where(mask, vals, np.inf)
+    assert st["min"] == masked.min()
+    assert st["argmin"] == masked.argmin()
+    np.testing.assert_allclose(st["sum"], vals[mask].sum(), rtol=1e-5)
+    assert st["count"] == mask.sum()
+
+
+# ---------------------------------------------------------------------------
+# Streaming engine, single device (mesh of 1): top-k vs best(), summaries
+# ---------------------------------------------------------------------------
+def test_stream_topk_and_summaries_match_monolithic():
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import sweep
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0],
+             "frame_rate": [15.0, 30.0, 60.0],
+             "sys_rows": [8.0, 16.0, 32.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    res = sweep("edgaze", grids)
+    st = sweep_stream("edgaze", grids, chunk_size=16, k=5)
+    assert st.n_points == len(res)
+    best = res.best("total_j", k=5)
+    # metric values agree rank-for-rank (ties may permute equal rows)
+    np.testing.assert_allclose([r["total_j"] for r in st.topk],
+                               [r["total_j"] for r in best], rtol=1e-6)
+    # every reported row reproduces its metric through the full table
+    for row in st.topk:
+        mask = res.select(variant=row["variant"],
+                          cis_node=row["cis_node"],
+                          frame_rate=row["frame_rate"],
+                          sys_rows=row["sys_rows"],
+                          active_fraction_scale=row[
+                              "active_fraction_scale"])
+        assert mask.any()
+        np.testing.assert_allclose(res.outputs["total_j"][mask][0],
+                                   row["total_j"], rtol=1e-6)
+    for variant in ("2d_in", "3d_in"):
+        mask = res.params["variant"] == variant
+        feas = res.outputs["feasible"][mask].astype(bool)
+        vals = res.outputs["total_j"][mask][feas]
+        s = st.summaries[variant]
+        assert s["n"] == int(mask.sum())
+        assert s["n_feasible"] == int(feas.sum())
+        np.testing.assert_allclose(s["metric_min"], vals.min(), rtol=1e-6)
+        np.testing.assert_allclose(s["metric_mean"], vals.mean(),
+                                   rtol=1e-5)
+        assert s["argmin_point"] is not None
+
+
+def test_stream_topk_accumulates_across_chunks_smaller_than_k():
+    """chunk_size < k must still return the full top-k: the running state
+    keeps k entries, not min(k, chunk) (regression)."""
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import sweep
+    grids = {"variant": ["3d_in"], "cis_node": [130.0, 90.0, 65.0],
+             "frame_rate": [15.0, 30.0, 60.0],
+             "active_fraction_scale": [0.25, 0.5, 1.0]}
+    res = sweep("edgaze", grids)
+    st = sweep_stream("edgaze", grids, chunk_size=4, k=8)
+    best = res.best("total_j", k=8)
+    assert len(st.topk) == len(best) == 8
+    np.testing.assert_allclose([r["total_j"] for r in st.topk],
+                               [r["total_j"] for r in best], rtol=1e-6)
+
+
+def test_stream_infeasible_points_masked_out():
+    from repro.core.shard_sweep import sweep_stream
+    st = sweep_stream("edgaze", {"variant": ["2d_in"],
+                                 "frame_rate": [1e5]}, chunk_size=8, k=3)
+    assert st.n_feasible == 0
+    assert st.topk == []                   # nothing feasible -> no winners
+    assert st.summaries["2d_in"]["argmin_point"] is None
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: 8 forced host devices in a subprocess
+# ---------------------------------------------------------------------------
+SCRIPT = r"""
+import os
+# overwrite (not append): the parent pytest process may carry a forced
+# device count already (e.g. repro.launch.dryrun sets 512 on import)
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.core.batch import evaluate_batch, make_points
+from repro.core.shard_sweep import evaluate_batch_sharded, sweep_stream
+from repro.core.sweep import lower_variant, sweep
+from repro.launch.mesh import make_batch_mesh
+
+assert len(jax.devices()) == 8
+mesh = make_batch_mesh()
+
+# 1. sharded vs unsharded parity, non-divisible batch (pad + slice)
+plan = lower_variant("edgaze", "3d_in")
+pts = make_points(plan, 1001, cis_node=np.linspace(28, 130, 1001),
+                  frame_rate=np.linspace(15, 120, 1001))
+ref = evaluate_batch(plan, pts)
+sh = evaluate_batch_sharded(plan, pts, mesh=mesh)
+for key in ref:
+    assert sh[key].shape == ref[key].shape, key
+    np.testing.assert_allclose(sh[key], ref[key], rtol=1e-6, atol=0,
+                               err_msg=key)
+
+# 2. chunked + sharded sweep == monolithic single-device sweep
+grids = {"variant": ["2d_in", "3d_in"], "cis_node": [130.0, 65.0],
+         "frame_rate": [15.0, 30.0, 60.0], "sys_rows": [8.0, 16.0, 32.0],
+         "mem_tech": ["sram_hp", "stt"]}
+mono = sweep("edgaze", grids)
+shard = sweep("edgaze", grids, chunk_size=13, mesh=mesh)
+assert len(mono) == len(shard)
+for key in mono.outputs:
+    np.testing.assert_allclose(shard.outputs[key], mono.outputs[key],
+                               rtol=1e-6, atol=0, err_msg=key)
+
+# 3. streaming top-k on the 8-device mesh vs best()
+st = sweep_stream("edgaze", grids, chunk_size=32, k=5, mesh=mesh)
+assert st.n_devices == 8
+assert st.n_points == len(mono)
+best = mono.best("total_j", k=5)
+np.testing.assert_allclose([r["total_j"] for r in st.topk],
+                           [r["total_j"] for r in best], rtol=1e-6)
+feas = mono.outputs["feasible"].astype(bool)
+assert st.n_feasible == int(feas.sum())
+print("SHARD_SWEEP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_streaming_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARD_SWEEP_OK" in proc.stdout, proc.stdout

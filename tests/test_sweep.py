@@ -129,6 +129,78 @@ def test_best_returns_feasible_minimum():
 
 
 # ---------------------------------------------------------------------------
+# ISSUE 2 regressions: transfer gating, select tolerance, timing split,
+# reference-structure independence from soc_node
+# ---------------------------------------------------------------------------
+def test_default_eval_pytree_has_no_unit_matrix():
+    """keep_unit_energies=False must drop the B x U leaf INSIDE jit —
+    the old path computed and device->host transferred it every call."""
+    import jax
+    from repro.core.batch import eval_fn, evaluate_batch, make_points
+    from repro.core.sweep import lower_variant
+    plan = lower_variant("edgaze", "3d_in")
+    pts = make_points(plan, 64)
+    shapes = jax.tree.map(lambda s: s.shape,
+                          eval_fn(plan).lower(pts).out_info)
+    assert shapes, "empty output pytree"
+    assert all(s == (64,) for s in shapes.values()), shapes
+    # the flag still works, as its own compiled variant
+    out = evaluate_batch(plan, pts, keep_unit_energies=True)
+    assert out["unit_e"].shape == (64, plan.num_units)
+    assert "unit_e" not in evaluate_batch(plan, pts)
+
+
+def test_select_matches_after_float_roundtrip():
+    res = sweep("rhythmic", {"variant": ["2d_in"],
+                             "cis_node": [130.0, 65.0],
+                             "frame_rate": [15.0, 30.1, 60.0]})
+    # f32 round-trip (what device arrays / generated grids produce)
+    v = float(np.float32(30.1))
+    assert v != 30.1
+    assert res.select(frame_rate=v).sum() == 2
+    assert res.select(variant="2d_in", cis_node=65.0).sum() == 3
+    assert res.select(mem_tech="declared").sum() == 6
+    assert not res.select(frame_rate=29.9).any()
+
+
+def test_compile_and_eval_time_reported_separately():
+    from repro.core import lower_cache_clear
+    lower_cache_clear()                     # fresh plans -> must recompile
+    grids = {"variant": ["2d_in"], "cis_node": [130.0, 65.0]}
+    cold = sweep("rhythmic", grids)
+    warm = sweep("rhythmic", grids)
+    assert cold.compile_s > 0.0
+    assert warm.compile_s == 0.0            # executables reused
+    assert warm.eval_s > 0.0
+    assert warm.wall_s >= warm.eval_s
+    # the headline throughput number is call-order independent
+    assert warm.eval_s < cold.wall_s
+
+
+def test_reference_structure_independent_of_soc_node():
+    """soc_node=65 used to rebuild the structure at cis 130, shifting the
+    structure-derived defaults; roles now tie-break on layer facts."""
+    from repro.core.batch import point_defaults
+    from repro.core.sweep import lower_variant
+    for soc in (22, 65):
+        for variant in ("3d_in", "2d_off", "2d_in"):
+            plan = lower_variant("edgaze", variant, soc_node=soc)
+            d = point_defaults(plan)
+            assert d["cis_node"] == 65.0, (variant, soc)
+            if variant != "2d_in":       # 2d_in has no host domain at all
+                assert d["soc_node"] == float(soc), (variant, soc)
+    # full-row parity vs the scalar oracle at the colliding soc value
+    res = sweep("edgaze", {"cis_node": [130.0, 65.0, 28.0]}, soc_node=65)
+    idx = np.linspace(0, len(res) - 1, 6).astype(int)
+    for i in idx:
+        row = res.row(int(i))
+        ref = scalar_point("edgaze", row["variant"],
+                           cis_node=row["cis_node"], soc_node=65)
+        _assert_row_matches(row, ref, ("soc65", row["variant"],
+                                       row["cis_node"]))
+
+
+# ---------------------------------------------------------------------------
 # Pallas category reduction
 # ---------------------------------------------------------------------------
 def test_category_reduce_matches_matmul():
