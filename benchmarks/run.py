@@ -15,6 +15,48 @@ from typing import Callable, List
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
+#: persistent XLA compilation cache shared by the harness and the mega
+#: subprocess lanes; repeat bench runs (and CI re-runs restoring the dir
+#: from the actions cache) skip recompilation entirely
+CACHE_DIR = os.environ.get(
+    "BENCH_COMPILE_CACHE_DIR",
+    os.environ.get(                 # honor a pre-set jax cache knob so the
+        "JAX_COMPILATION_CACHE_DIR",  # hit/miss accounting counts the dir
+        os.path.join(os.path.dirname(__file__), ".jax_cache")))  # in use
+
+
+def _compile_cache_env(env: dict) -> dict:
+    """Child-process env wiring for the persistent compilation cache.
+
+    The cache dir is forced (not defaulted) so children always compile
+    into the SAME directory the parent's hit/miss accounting counts,
+    even when the surrounding environment already exports a different
+    ``JAX_COMPILATION_CACHE_DIR`` (which ``CACHE_DIR`` honors anyway
+    when ``BENCH_COMPILE_CACHE_DIR`` is unset).
+    """
+    env["JAX_COMPILATION_CACHE_DIR"] = CACHE_DIR
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0")
+    env.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+    return env
+
+
+def _setup_compile_cache() -> None:
+    """Point this process's jax at the persistent compilation cache."""
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", CACHE_DIR)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:  # noqa: BLE001 - cache is an optimization only
+        pass
+
+
+def _cache_entries() -> int:
+    try:
+        return len(os.listdir(CACHE_DIR))
+    except OSError:
+        return 0
+
 
 def _timed(fn: Callable) -> tuple:
     t0 = time.perf_counter()
@@ -233,21 +275,39 @@ flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
 os.environ["XLA_FLAGS"] = " ".join(
     flags + [f"--xla_force_host_platform_device_count={n_dev}"])
 import jax
-from repro.core.shard_sweep import sweep_stream
+from repro.core.shard_sweep import stream_cache_info, sweep_stream
 assert len(jax.devices()) == n_dev, (
     f"lane wants {n_dev} host devices, jax sees {jax.devices()}; "
     f"is JAX_PLATFORMS overridden to an accelerator?")
 grids = json.loads(os.environ["MEGA_GRIDS_JSON"])
-out = {"n_devices": n_dev, "n_points": 0, "n_feasible": 0,
-       "eval_s": 0.0, "compile_s": 0.0, "topk": []}
-for algo in ("edgaze", "rhythmic"):
-    s = sweep_stream(algo, grids, chunk_size=1 << 18, k=3)
-    out["n_points"] += s.n_points
-    out["n_feasible"] += s.n_feasible
-    out["eval_s"] += s.eval_s
-    out["compile_s"] += s.compile_s
-    out["topk"] += [dict(algorithm=algo, **r) for r in s.topk[:1]]
-out["points_per_sec"] = out["n_points"] / out["eval_s"]
+# ONE banked call: every Ed-Gaze + Rhythmic variant rides one fused
+# step+merge executable (PlanBank + on-device grid decode)
+s = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=1 << 18, k=3)
+info = stream_cache_info()
+best = {}
+for r in s.topk:                       # full rows, global top-k order
+    best.setdefault(r["algorithm"], r)
+for algo, rec in s.best_by_algorithm().items():
+    # an algorithm may miss the global top-k entirely
+    sm = rec["summary"]
+    if algo in best or sm["argmin_point"] is None:
+        continue
+    # re-score the argmin point through the per-plan evaluator so the
+    # fallback row carries the same full output schema as top-k rows
+    from repro.core.batch import evaluate_batch, make_points
+    from repro.core.sweep import lower_variant
+    plan = lower_variant(algo, rec["variant"])
+    out = evaluate_batch(plan, make_points(
+        plan, 1, **{ax: [val] for ax, val in sm["argmin_point"].items()}))
+    best[algo] = dict(variant=rec["variant"], algorithm=algo,
+                      index=sm["argmin_index"], **sm["argmin_point"],
+                      **{key: float(val[0]) for key, val in out.items()})
+out = {"n_devices": n_dev, "n_points": s.n_points,
+       "n_feasible": s.n_feasible, "n_variants": s.n_variants,
+       "eval_s": s.eval_s, "compile_s": s.compile_s,
+       "points_per_sec": s.points_per_sec,
+       "step_compiles": info["step_compiles"],
+       "topk": list(best.values())}
 print("MEGA_JSON:" + json.dumps(out))
 """
 
@@ -257,18 +317,21 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
 
     Runs the full grid twice in subprocesses — once on 1 device and once
     on 8 forced-host devices (the device-count XLA flag must precede jax
-    init) — and records warm points/sec plus the device-scaling ratio.
-    Scale down with MEGA_SWEEP_GRIDS_JSON for smoke runs.
+    init) — and records warm points/sec, the device-scaling ratio, the
+    one-executable compile split (``mega_step_compiles`` must stay 1) and
+    the persistent compilation-cache traffic.  Scale down with
+    MEGA_SWEEP_GRIDS_JSON for smoke runs.
     """
     import subprocess
     import sys
     src = os.path.join(os.path.dirname(__file__), "..", "src")
-    env = dict(os.environ,
-               PYTHONPATH=os.pathsep.join(
-                   [src, os.environ.get("PYTHONPATH", "")]),
-               MEGA_GRIDS_JSON=os.environ.get("MEGA_SWEEP_GRIDS_JSON",
-                                              json.dumps(_MEGA_GRIDS)))
+    env = _compile_cache_env(dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join([src, os.environ.get("PYTHONPATH", "")]),
+        MEGA_GRIDS_JSON=os.environ.get("MEGA_SWEEP_GRIDS_JSON",
+                                       json.dumps(_MEGA_GRIDS))))
     lanes = {}
+    cache = {"dir": CACHE_DIR, "entries_before": _cache_entries()}
     for n_dev in (1, 8):
         proc = subprocess.run([sys.executable, "-c", _MEGA_CHILD,
                                str(n_dev)], env=env, capture_output=True,
@@ -277,15 +340,24 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
         line = [ln for ln in proc.stdout.splitlines()
                 if ln.startswith("MEGA_JSON:")][-1]
         lanes[n_dev] = json.loads(line[len("MEGA_JSON:"):])
+    cache["entries_after"] = _cache_entries()
+    cache["new_entries"] = cache["entries_after"] - cache["entries_before"]
+    # 0 new entries on a re-run == every XLA compile was a cache hit
+    cache["hit"] = bool(cache["entries_before"]
+                        and cache["new_entries"] == 0)
     scaling = lanes[8]["points_per_sec"] / lanes[1]["points_per_sec"]
     rec = {"mega_n_points": lanes[8]["n_points"],
            "mega_n_feasible": lanes[8]["n_feasible"],
+           "mega_n_variants": lanes[8]["n_variants"],
            "mega_points_per_sec_1dev": round(lanes[1]["points_per_sec"]),
            "mega_points_per_sec_8dev": round(lanes[8]["points_per_sec"]),
            "mega_eval_s_1dev": round(lanes[1]["eval_s"], 2),
            "mega_eval_s_8dev": round(lanes[8]["eval_s"], 2),
+           "mega_compile_s_1dev": round(lanes[1]["compile_s"], 2),
            "mega_compile_s_8dev": round(lanes[8]["compile_s"], 2),
+           "mega_step_compiles": lanes[8]["step_compiles"],
            "mega_device_scaling_8v1": round(scaling, 2),
+           "mega_compile_cache": cache,
            "mega_best": lanes[8]["topk"]}
     if emit_json:
         _update_bench_json(rec)
@@ -293,7 +365,10 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
     return [f"mega_sweep,{lanes[8]['eval_s']*1e6:.0f},points={n}"
             f" pps_1dev={lanes[1]['points_per_sec']:,.0f}"
             f" pps_8dev={lanes[8]['points_per_sec']:,.0f}"
-            f" scaling={scaling:.2f}x"]
+            f" scaling={scaling:.2f}x"
+            f" compile_8dev={lanes[8]['compile_s']:.2f}s"
+            f" executables={lanes[8]['step_compiles']}"
+            f" cache_hit={cache['hit']}"]
 
 
 def roofline_table() -> List[str]:
@@ -322,9 +397,19 @@ BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
            mega_sweep, roofline_table]
 
 
-def main() -> None:
+def main(argv: List[str] = None) -> None:
+    """Run all benches, or only those named on the command line
+    (``python benchmarks/run.py mega_sweep design_sweep``)."""
+    import sys
+    names = list(sys.argv[1:] if argv is None else argv)
+    by_name = {b.__name__: b for b in BENCHES}
+    unknown = [n for n in names if n not in by_name]
+    if unknown:
+        raise SystemExit(f"unknown benches {unknown}; "
+                         f"valid: {sorted(by_name)}")
+    _setup_compile_cache()
     print("name,us_per_call,derived")
-    for bench in BENCHES:
+    for bench in ([by_name[n] for n in names] or BENCHES):
         try:
             for row in bench():
                 print(row)

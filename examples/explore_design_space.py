@@ -7,10 +7,16 @@ Three levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
 2. a full design-space sweep — thousands of (node, frame rate, systolic
    geometry, memory technology, power gating, pixel pitch) points in a
    single batched evaluation, with the Pareto-style winners printed;
-3. a streaming mega-sweep — the same grids densified to ~1e6 points (set
-   MEGA_SWEEP=1 for >=1e7), walked in bounded chunks, sharded across all
-   visible devices and reduced on device to a running top-k + per-variant
-   summaries (repro.core.shard_sweep).  Force a multi-device CPU run with
+3. a ONE-EXECUTABLE streaming mega-sweep — every Ed-Gaze AND Rhythmic
+   variant stacked into a single PlanBank (coefficients are traced jit
+   inputs, not baked constants) and streamed through one fused
+   step+merge executable: the driver ships one scalar per chunk, design
+   points are decoded on device from the flat index (Pallas
+   ``grid_decode`` kernel), and the running top-k / per-variant
+   summaries never leave the device.  The same grids densify to ~1e6
+   points here (set MEGA_SWEEP=1 for >=1e7); the printed compile vs
+   eval split shows XLA is paid ONCE regardless of variant count.
+   Force a multi-device CPU run with
    XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
@@ -22,7 +28,7 @@ Run:  PYTHONPATH=src python examples/explore_design_space.py
 import json
 import os
 
-from repro.core.shard_sweep import sweep_stream
+from repro.core.shard_sweep import stream_cache_info, sweep_stream
 from repro.core.sweep import sweep
 from repro.core.usecases import run_study
 
@@ -77,7 +83,7 @@ def main():
               f"{tech_names[int(row['mem_tech'])]} -> "
               f"{row['total_j']*1e6:.2f} uJ/frame")
 
-    # ----- streaming mega-sweep: bounded memory at any N -------------------
+    # ----- one-executable streaming mega-sweep: bounded memory at any N ---
     import numpy as np
     mega = bool(int(os.environ.get("MEGA_SWEEP", "0")))
     mega_grids = {
@@ -89,20 +95,25 @@ def main():
         "mem_tech": ["sram", "sram_hp", "stt"],
         "active_fraction_scale": list(np.linspace(0.1, 1.0, 5)),
         "pixel_pitch_um": list(np.linspace(2.0, 6.0, 7 if mega else 4))}
-    streams = [sweep_stream(a, mega_grids, chunk_size=1 << 17, k=3)
-               for a in ("edgaze", "rhythmic")]
-    n = sum(s.n_points for s in streams)
-    pps = n / sum(s.eval_s for s in streams)
-    print(f"\n=== Streaming mega-sweep: {n:,} points over "
-          f"{streams[0].n_devices} device(s), {pps:,.0f} points/s warm "
-          f"(compile {sum(s.compile_s for s in streams):.1f}s) ===")
-    for s in streams:
-        row = s.topk[0]
-        print(f"{s.algorithm:<9} best {row['variant']:<12} "
-              f"{int(row['cis_node']):>4}n {row['frame_rate']:>5.0f}fps "
-              f"{int(row['sys_rows'])}x{int(row['sys_cols'])} -> "
-              f"{row['total_j']*1e6:.2f} uJ/frame "
-              f"({s.n_feasible:,}/{s.n_points:,} feasible)")
+    # ONE call, ONE executable: all 8 Ed-Gaze + Rhythmic variants ride a
+    # shared PlanBank; points are decoded on device from the flat index
+    s = sweep_stream(["edgaze", "rhythmic"], mega_grids,
+                     chunk_size=1 << 17, k=6)
+    print(f"\n=== Streaming mega-sweep: {s.n_points:,} points x "
+          f"{s.n_variants} variants over {s.n_devices} device(s) ===")
+    print(f"compile {s.compile_s:.1f}s ONCE "
+          f"({stream_cache_info()['step_compiles']} executable) vs "
+          f"eval {s.eval_s:.1f}s warm -> {s.points_per_sec:,.0f} points/s")
+    for algo, rec in sorted(s.best_by_algorithm().items()):
+        p = rec["summary"]["argmin_point"]
+        if p is None:                      # no feasible point at all
+            print(f"{algo:<9} no feasible design in this grid")
+            continue
+        print(f"{algo:<9} best {rec['variant']:<12} "
+              f"{int(p['cis_node']):>4}n {p['frame_rate']:>5.0f}fps "
+              f"{int(p['sys_rows'])}x{int(p['sys_cols'])} -> "
+              f"{rec['summary']['metric_min']*1e6:.2f} uJ/frame "
+              f"({rec['n_feasible']:,} feasible)")
 
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "results", "dryrun.json")

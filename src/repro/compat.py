@@ -9,6 +9,7 @@ silently dropped (meshes are implicitly all-Auto there anyway).
 """
 from __future__ import annotations
 
+import contextlib
 import enum
 import inspect
 
@@ -54,6 +55,20 @@ def cost_analysis(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca or {}
+
+
+def x64_context(enable: bool):
+    """Thread-local 64-bit mode, as a context manager that can also no-op.
+
+    The streaming sweep widens its flat design-point indices to int64 only
+    when the grid actually crosses 2**31 points; everything else in the
+    repo stays in the default 32-bit world, so the switch must be scoped
+    (``jax.experimental.enable_x64``), never the global x64 flag.
+    """
+    if not enable:
+        return contextlib.nullcontext()
+    from jax.experimental import enable_x64
+    return enable_x64()
 
 
 def shard_map(fn, *, mesh, in_specs, out_specs):

@@ -39,7 +39,10 @@ _LAZY_EXPORTS = {
     "ChunkedGrid": ".sweep", "SweepResult": ".sweep",
     "scalar_point": ".sweep", "sweep": ".sweep",
     "StreamResult": ".shard_sweep", "evaluate_batch_sharded": ".shard_sweep",
-    "sweep_stream": ".shard_sweep",
+    "sweep_stream": ".shard_sweep", "stream_cache_clear": ".shard_sweep",
+    "stream_cache_info": ".shard_sweep",
+    "BankDims": ".plan_bank", "PlanBank": ".plan_bank",
+    "build_plan_bank": ".plan_bank", "evaluate_bank": ".plan_bank",
 }
 
 
@@ -66,9 +69,11 @@ __all__ = [
     "walden_fom", "adc_energy_per_conversion", "scale_energy",
     "sram_access_energy", "MIPI_CSI2_ENERGY_PER_BYTE", "UTSV_ENERGY_PER_BYTE",
     # batched design-space engine (batch/sweep symbols resolve lazily)
-    "CATEGORIES", "ChunkedGrid", "DesignPoints", "EnergyPlan",
-    "StreamResult", "SweepResult", "dag_signature", "evaluate_batch",
+    "BankDims", "CATEGORIES", "ChunkedGrid", "DesignPoints", "EnergyPlan",
+    "PlanBank", "StreamResult", "SweepResult", "build_plan_bank",
+    "dag_signature", "evaluate_bank", "evaluate_batch",
     "evaluate_batch_sharded", "lower", "lower_cache_clear",
     "lower_cache_info", "make_points", "point_defaults",
-    "reference_outputs", "scalar_point", "sweep", "sweep_stream",
+    "reference_outputs", "scalar_point", "stream_cache_clear",
+    "stream_cache_info", "sweep", "sweep_stream",
 ]

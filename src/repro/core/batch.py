@@ -28,7 +28,7 @@ from .constants import (MIPI_CSI2_ENERGY_PER_BYTE, DYNAMIC_ENERGY_SCALE,
                         STT_READ_ENERGY_PER_BIT_65, STT_WRITE_ENERGY_PER_BIT_65,
                         UTSV_ENERGY_PER_BYTE, table_points)
 from .fom import fom_table_points
-from .plan import CATEGORIES, EnergyPlan
+from .plan import CATEGORIES, EnergyPlan, _EXTRA_CACHES
 
 TECH_DECLARED = -1  # mem_tech value meaning "keep each memory's technology"
 
@@ -278,6 +278,218 @@ def _build_eval(plan: EnergyPlan):
         return out
 
     return jax.jit(eval_batch, static_argnames=("keep_unit_energies",))
+
+
+# ---------------------------------------------------------------------------
+# Banked (multi-variant) evaluator: PlanBank coefficients as traced inputs
+# ---------------------------------------------------------------------------
+def build_banked_eval(dims):
+    """Evaluator ``(bank_arrays, variant_ids, points) -> outputs`` whose
+    coefficients are ARGUMENTS, not baked constants.
+
+    Shape-specialized on :class:`repro.core.plan_bank.BankDims` only: one
+    XLA executable serves every structural variant / algorithm stacked in
+    the bank, so the mega-sweep compiles once per chunk shape total.
+    Returns ``(eval_bank, eval_bank_uniform)``:
+
+    * ``eval_bank(bank, variant_ids, points)`` — fully mixed batches;
+      each point gathers its variant's fused coefficient row
+      (``plan_bank.bank_layout``) — O(B x W) gather traffic, the
+      flexible path;
+    * ``eval_bank_uniform(bank, variant_id, points)`` — one traced
+      variant INDEX for the whole batch; the coefficient row is a single
+      dynamic slice broadcast across points, so per-point traffic is
+      zero, matching the baked-constant evaluator's speed.  The
+      streaming driver aligns chunks to variant boundaries exactly so it
+      can ride this path.
+
+    The physics is the same Eqs. 1-17 arithmetic as the per-plan
+    evaluator with padded slots arranged to contribute exact zeros; the
+    per-category sum runs as a matvec against the row's ``(U, C+2)``
+    weight slab (the per-plan path keeps the shared-weight Pallas
+    ``category_reduce``).
+    """
+    from .plan_bank import bank_layout
+    V, A, L, F, D, M = dims
+    n_c = len(CATEGORIES)
+    layout = bank_layout(dims)
+
+    dyn_nodes, dyn_logv = _log_interp_const(DYNAMIC_ENERGY_SCALE)
+    leak_nodes, leak_logv = _log_interp_const(SRAM_LEAKAGE_PER_BIT)
+    hp_nodes, hp_logv = _log_interp_const(SRAM_HP_LEAKAGE_PER_BIT)
+
+    def node_for(role, declared, cis, soc):
+        # roles ride the fused row as exact small floats
+        return jnp.where(role == 0, cis, jnp.where(role == 1, soc, declared))
+
+    def eval_one(row, pt: DesignPoints):
+        def g(name):
+            off, shape = layout[name]
+            if not shape:
+                return row[off]
+            size = int(np.prod(shape))
+            v = row[off:off + size]
+            return v.reshape(shape) if len(shape) > 1 else v
+
+        frame_time = 1.0 / pt.frame_rate
+
+        # ----- Sec. 4.1 digital timing, data-driven over padded slots -----
+        if D:
+            thr = pt.sys_rows * pt.sys_cols * g("d_util")
+            cycles = jnp.where(g("d_is_sys") > 0.5,
+                               jnp.ceil(g("d_macs") / thr)
+                               + pt.sys_rows + pt.sys_cols,
+                               g("d_cycles"))
+            durs = cycles / g("d_clock")
+            edge_w = g("d_edge_w")
+            edge_m = g("d_edge_mask") > 0.5
+            starts = jnp.zeros((D,), jnp.float32)
+            for i in range(D):        # static unroll; masks stay traced
+                s_i = jnp.max(jnp.where(edge_m[i],
+                                        starts + edge_w[i] * durs, 0.0))
+                starts = starts.at[i].set(s_i)
+            ends = starts + durs
+            dv = g("d_valid") > 0.5
+            t_d = (jnp.max(jnp.where(dv, ends, -jnp.inf))
+                   - jnp.min(jnp.where(dv, starts, jnp.inf)))
+            t_d = jnp.where(jnp.any(dv), t_d, 0.0)
+        else:
+            t_d = jnp.float32(0.0)
+        t_a = (frame_time - t_d) / g("n_phases")
+        feasible = t_a > 0.0
+
+        rows = []
+
+        # ----- analog rows (Eqs. 2-13) ------------------------------------
+        if A:
+            pad = t_a * g("a_pad_coeff")
+            e_access = g("a_const")
+            if L:
+                la = g("lin_arr").astype(jnp.int32)
+                t_cell = jnp.maximum(pad[la] * g("lin_inv"), 1e-12)
+                e_access = e_access + jnp.zeros((A,), jnp.float32).at[
+                    la].add(g("lin_coeff") * t_cell)
+            if F:
+                fa = g("fom_arr").astype(jnp.int32)
+                t_cell = jnp.maximum(pad[fa] * g("fom_inv"), 1e-12)
+                fom = _walden_fom(1.0 / t_cell)
+                e_access = e_access + jnp.zeros((A,), jnp.float32).at[
+                    fa].add(g("fom_scale") * fom)
+            rows.append(e_access * g("a_ops"))
+
+        # ----- digital compute rows (Eqs. 14-15) --------------------------
+        if D:
+            node_u = node_for(g("d_role"), g("d_node"),
+                              pt.cis_node, pt.soc_node)
+            s_u = _interp_table(node_u, dyn_nodes, dyn_logv)
+            rows.append(g("d_dyn") * s_u + g("d_static") * durs)
+
+        # ----- memory rows (Eq. 16) ---------------------------------------
+        if M:
+            node_m = node_for(g("m_role"), g("m_node"),
+                              pt.cis_node, pt.soc_node)
+            s_m = _interp_table(node_m, dyn_nodes, dyn_logv)
+            tech = jnp.where(pt.mem_tech >= 0,
+                             pt.mem_tech.astype(jnp.float32), g("m_tech"))
+            is_stt = tech == 2
+            bits = g("m_bits_pa")
+            sram_access = (SRAM_ACCESS_ENERGY_PER_BIT_65 * bits
+                           * g("m_size_f")) * s_m
+            read_e = jnp.where(is_stt,
+                               STT_READ_ENERGY_PER_BIT_65 * bits * s_m,
+                               sram_access)
+            write_e = jnp.where(is_stt,
+                                STT_WRITE_ENERGY_PER_BIT_65 * bits * s_m,
+                                sram_access)
+            read_e = jnp.where(jnp.isnan(g("m_read_x")),
+                               read_e, g("m_read_x"))
+            write_e = jnp.where(jnp.isnan(g("m_write_x")),
+                                write_e, g("m_write_x"))
+            leak_bit = jnp.where(
+                is_stt, jnp.float32(STT_LEAKAGE_PER_BIT),
+                jnp.where(tech == 1,
+                          _interp_table(node_m, hp_nodes, hp_logv),
+                          _interp_table(node_m, leak_nodes, leak_logv)))
+            leak = leak_bit * g("m_bits_total")
+            leak = jnp.where(jnp.isnan(g("m_leak_x")),
+                             leak, g("m_leak_x"))
+            reads = (g("m_reads_fixed")
+                     + g("m_reads_dnn2") / jnp.maximum(pt.sys_rows, 1.0))
+            alpha = g("m_alpha") * pt.active_fraction_scale
+            rows.append(read_e * reads + write_e * g("m_writes")
+                        + leak * frame_time * alpha)
+
+        # ----- communication rows (Eq. 17, fixed utsv+mipi slots) ---------
+        rows.append(jnp.stack([
+            g("utsv_bytes") * UTSV_ENERGY_PER_BYTE,
+            g("mipi_bytes") * MIPI_CSI2_ENERGY_PER_BYTE]))
+        unit_e = jnp.concatenate(rows)
+        red = unit_e @ g("weights")
+
+        # ----- Sec. 6.2 power density -------------------------------------
+        analog_area = g("n_pixels") * (pt.pixel_pitch_um * 1e-3) ** 2
+        if M:
+            node_area = node_for(g("m_area_role"), g("m_node"),
+                                 pt.cis_node, pt.soc_node)
+            cell_area = 150.0 * (node_area * 1e-6) ** 2
+            digital_area = jnp.sum(g("m_bits_total") * cell_area)
+        else:
+            digital_area = jnp.float32(0.0)
+        area = jnp.where(g("stacked") > 0,
+                         jnp.maximum(analog_area, digital_area),
+                         analog_area + digital_area)
+
+        return dict(red=red, t_d=t_d, t_a=t_a, feasible=feasible,
+                    area_mm2=area)
+
+    def _outputs(per, points):
+        red = per["red"]
+        out = {f"cat_{c}_j": red[:, i] for i, c in enumerate(CATEGORIES)}
+        out["total_j"] = red[:, n_c]
+        out["on_sensor_j"] = red[:, n_c + 1]
+        out["t_d_s"] = per["t_d"]
+        out["t_a_s"] = per["t_a"]
+        out["feasible"] = per["feasible"]
+        out["area_mm2"] = per["area_mm2"]
+        out["power_mw"] = out["on_sensor_j"] * points.frame_rate * 1e3
+        out["density_mw_mm2"] = out["power_mw"] / jnp.maximum(
+            per["area_mm2"], 1e-9)
+        # trace-time guard: the streaming path relies on OUT_KEYS being
+        # exactly this schema — catch drift when a new output is added
+        assert set(out) == set(OUT_KEYS), (sorted(out), OUT_KEYS)
+        return out
+
+    def eval_bank(bank, variant_ids, points: DesignPoints):
+        per = jax.vmap(lambda v, pt: eval_one(bank["fused"][v], pt)
+                       )(variant_ids, points)
+        return _outputs(per, points)
+
+    def eval_bank_uniform(bank, variant_id, points: DesignPoints):
+        row = bank["fused"][variant_id]          # one slice, broadcast
+        per = jax.vmap(lambda pt: eval_one(row, pt))(points)
+        return _outputs(per, points)
+
+    return eval_bank, eval_bank_uniform
+
+
+#: the evaluators' output schema is fixed by construction — callers that
+#: only need the key list (e.g. the streaming step builder) use this
+#: instead of paying an abstract trace through jax.eval_shape
+OUT_KEYS = tuple(sorted(
+    [f"cat_{c}_j" for c in CATEGORIES]
+    + ["total_j", "on_sensor_j", "t_d_s", "t_a_s", "feasible",
+       "area_mm2", "power_mw", "density_mw_mm2"]))
+
+_BANKED_JIT: Dict[tuple, object] = {}
+_EXTRA_CACHES.append(_BANKED_JIT)       # flushed by lower_cache_clear()
+
+
+def banked_eval_fn(dims):
+    """Jitted mixed-variant :func:`build_banked_eval`, memoized on dims."""
+    fn = _BANKED_JIT.get(tuple(dims))
+    if fn is None:
+        fn = _BANKED_JIT[tuple(dims)] = jax.jit(build_banked_eval(dims)[0])
+    return fn
 
 
 def eval_fn(plan: EnergyPlan):

@@ -1,58 +1,77 @@
-"""Sharded, streaming mega-sweeps: ``evaluate_batch`` at >=1e7 points.
+"""Sharded, streaming mega-sweeps: one executable for the whole sweep.
 
 The PR-1 engine scores one monolithic batch per structural variant on one
 device and returns N-row tables — fine at ~2e4 points, impossible at the
-production scale the ROADMAP asks for (the host meshgrid alone dies near
-1e7 points).  This module scales the same evaluator three ways:
+production scale the ROADMAP asks for.  PR 2 added sharding + streaming,
+but still compiled one step executable PER VARIANT (plan coefficients were
+baked constants) and re-materialized every chunk on the host
+(``np.unravel_index`` + pad + transfer).  At 8 variants the mega-sweep
+spent more time in XLA than in evaluation.  This module runs the entire
+sweep — all algorithms x all variants x all chunks — through ONE compiled
+chunk executable (sharded step + state merge fused):
 
-1. **Sharding** — :func:`evaluate_batch_sharded` splits the ``DesignPoints``
-   batch axis over a 1-D ``("batch",)`` device mesh
-   (``repro.launch.mesh.make_batch_mesh``) with ``shard_map``; batches are
-   padded to a device-divisible size and sliced back, so any batch size
-   works.  Validated on CPU via
-   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
-2. **Streaming** — :func:`sweep_stream` walks arbitrary cartesian grids
-   through ``ChunkedGrid`` flat-index chunks (host memory O(chunk_size))
-   and evaluates every chunk through one AOT-compiled sharded executable
-   per variant.
-3. **On-device reduction** — each chunk folds into a bounded state that
-   never leaves the device: a running top-k by any output metric plus
-   per-variant min/mean/argmin/feasible-count summaries, with the wide
-   per-chunk reduction riding the Pallas ``block_stats`` kernel
-   (``repro.kernels.stream_reduce``).  Padding rows carry ``valid=False``
-   and are mask-excluded from feasibility, summaries and top-k.
+1. **PlanBank** — per-variant ``EnergyPlan`` coefficients are padded,
+   stacked ``(V, ...)`` and passed as traced jit inputs
+   (``repro.core.plan_bank``), so the evaluator is shape-specialized only;
+   each design point gathers its own variant's coefficient rows on device.
+2. **On-device grid decoding** — the driver dispatches a scalar ``start``
+   per chunk; the Pallas ``grid_decode`` kernel expands it into axis
+   values + variant ids by div/mod against tiny device-resident axis
+   tables.  No per-chunk host unravel, padding or point transfer — the
+   dispatch loop ships O(1) bytes per chunk and pipelines arbitrarily
+   deep (``pipeline_depth``).
+3. **Banked streaming state** — one ``(n_variants, ...)`` summary state +
+   one global running top-k, folded per chunk inside the same donated
+   executable; chunks align to variant boundaries so the wide per-chunk
+   leg rides the Pallas ``block_stats`` kernel and the per-variant slot
+   is a dynamic index.  (Fully interleaved chunks would pair the
+   mixed-variant ``plan_bank.evaluate_bank`` evaluator with the
+   ``block_stats_banked`` kernel — both exist and are parity-tested, but
+   the aligned-chunk path is faster on every measured lane because the
+   coefficient row broadcasts instead of gathering per point.)
 
-    res = sweep_stream("edgaze", grids, chunk_size=1 << 18, k=8)
-    res.topk[0]              # best design point (full row)
-    res.summaries["3d_in"]   # per-variant min / mean / argmin
-    res.points_per_sec       # warm streaming throughput
+Flat stream indices are variant-major (``variant = g // n_var``); they
+ride int32 and widen to int64 (scoped ``repro.compat.x64_context``) for
+grids >= 2**31 points.  ``index_range=`` streams a sub-range of the flat
+index space — the multi-host partitioning hook and the int64 test seam.
 
-Parity: each chunk matches the PR-1 ``evaluate_batch`` oracle (rel tol
-<= 1e-5 end-to-end vs the scalar path) and the top-k matches
-``SweepResult.best()`` on cross-checkable grids — asserted in
-tests/test_shard_sweep.py.
+    res = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=1 << 18)
+    res.topk[0]                        # best design point (full row)
+    res.summaries["edgaze/3d_in"]      # per-variant min / mean / argmin
+    stream_cache_info()                # {"step_compiles": 1, ...}
+
+Parity: banked results match the monolithic ``sweep()`` oracle (rel tol
+1e-6; padded bank slots contribute exact zeros) — asserted in
+tests/test_shard_sweep.py under the forced 8-device host platform.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..compat import shard_map
+from ..compat import shard_map, x64_context
+from ..kernels.grid_decode import grid_decode
 from ..kernels.stream_reduce import block_stats
 from ..launch.mesh import make_batch_mesh
-from .batch import DesignPoints, eval_fn, make_points
-from .plan import EnergyPlan
-from .sweep import (AXES, ChunkedGrid, _normalize_grids, lower_variant,
+from .batch import (DesignPoints, OUT_KEYS, build_banked_eval, eval_fn,
+                    make_points)
+from .plan import EnergyPlan, _EXTRA_CACHES
+from .plan_bank import PlanBank, build_plan_bank
+from .sweep import (AXES, _normalize_grids, axis_tables, lower_variant,
                     variant_grid)
 
 _BATCH_SPEC = P("batch")
 _POINT_SPECS = DesignPoints(*([_BATCH_SPEC] * len(DesignPoints._fields)))
+
+# the on-device decoder emits axis rows in ChunkedGrid order == AXES order;
+# DesignPoints consumes them positionally
+assert tuple(AXES) == DesignPoints._fields, (AXES, DesignPoints._fields)
 
 
 def _mesh_key(mesh) -> tuple:
@@ -136,107 +155,204 @@ def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
 
 
 # ---------------------------------------------------------------------------
-# Streaming reduction: bounded on-device state per variant
+# Banked streaming: PlanBank evaluation + on-device grid decoding
 # ---------------------------------------------------------------------------
-def _init_state(k: int, n_out: int) -> Dict[str, jnp.ndarray]:
+#: compiled (step, merge) executables keyed on SHAPES only — mesh, chunk,
+#: reduction params, bank dims, grid shape and index dtype.  Coefficients
+#: and axis values are traced inputs, so re-gridding, re-lowering or
+#: swapping algorithms with the same padded dims all hit.
+_STREAM_CACHE: Dict[tuple, tuple] = {}
+_STREAM_STATS = {"step_compiles": 0, "hits": 0}
+_EXTRA_CACHES.append(_STREAM_CACHE)     # flushed by lower_cache_clear()
+
+
+def stream_cache_info() -> Dict[str, int]:
+    """Executable-cache counters for the one-executable invariant tests."""
+    return dict(_STREAM_STATS, size=len(_STREAM_CACHE))
+
+
+def stream_cache_clear() -> None:
+    _STREAM_CACHE.clear()
+    for key in _STREAM_STATS:
+        _STREAM_STATS[key] = 0
+
+
+def _init_banked_state(k: int, n_out: int, n_variants: int,
+                       idx_dtype) -> Dict[str, jnp.ndarray]:
     return dict(
         topk_v=jnp.full((k,), jnp.inf, jnp.float32),
-        topk_i=jnp.full((k,), -1, jnp.int32),
+        topk_i=jnp.full((k,), -1, idx_dtype),
         topk_out=jnp.zeros((k, n_out), jnp.float32),
-        n=jnp.zeros((), jnp.int32),
-        n_feasible=jnp.zeros((), jnp.int32),
-        metric_sum=jnp.zeros((), jnp.float32),
-        metric_min=jnp.asarray(jnp.inf, jnp.float32),
-        argmin=jnp.asarray(-1, jnp.int32),
+        n_feasible=jnp.zeros((n_variants,), idx_dtype),
+        metric_sum=jnp.zeros((n_variants,), jnp.float32),
+        metric_min=jnp.full((n_variants,), jnp.inf, jnp.float32),
+        argmin=jnp.full((n_variants,), -1, idx_dtype),
     )
 
 
-def _make_stream_step(plan: EnergyPlan, mesh, metric: str, k: int,
-                      chunk: int, block_points: int):
-    """One jitted chunk step: sharded eval + on-device fold into state.
+def _variant_span_counts(lo: int, hi: int, n_var: int, n_variants: int
+                         ) -> np.ndarray:
+    """How many of the flat indices ``[lo, hi)`` land in each variant.
 
-    The returned callable maps ``(points[chunk], valid[chunk],
-    base_index, state) -> state``; nothing per-point ever reaches the
-    host.  The whole wide reduction — Pallas block stats AND the local
-    top-k — runs INSIDE the shard body on each device's slice, so only
-    O(k + chunk/block_points) partials per shard cross the mesh; the
-    outer merge touches tiny arrays.  Compiled AOT by the caller, which
-    reports compile vs eval time separately.
+    The flat stream is variant-major, so per-variant valid counts are pure
+    range arithmetic — no reason to burn device time scatter-counting them
+    per chunk.
     """
-    fn = eval_fn(plan)
+    vi = np.arange(n_variants, dtype=np.int64)
+    base = vi * n_var
+    return np.maximum(
+        np.minimum(hi, base + n_var) - np.maximum(lo, base), 0)
+
+
+def _banked_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
+                 block_points: int, shape: Tuple[int, ...], n_var: int,
+                 idx_dtype):
+    """Build the (untraced) banked chunk step + its output key list.
+
+    The step maps ``(start, limit, tables, bank_arrays, state) ->
+    (state, counts)`` entirely on device: each shard decodes its own
+    flat-index slice, evaluates it through the banked evaluator, and
+    reduces to O(k) partials inside the shard body — only those cross
+    the mesh — before the merge folds them into the donated running
+    state.  The driver aligns chunks to variant boundaries (variants own
+    contiguous runs of the variant-major flat index space), so the whole
+    chunk shares one variant and its coefficient row is a broadcast
+    dynamic slice of the bank — the variant index ``start // n_var``
+    stays a traced value, so the executable serves every variant.
+    ``limit`` masks both the variant's end and the sweep's
+    ``index_range`` end.
+
+    PR 2 kept the merge as a separate executable because fusing it made
+    GSPMD partition the whole step around the replicated state update;
+    that pressure vanished once the per-chunk partials fold to scalars
+    INSIDE the shard body, and fusing now saves a dispatch + tiny-array
+    reshard per chunk (~8% wall on the 8-device forced-host lane) while
+    halving the executable count.  The extra ``counts`` output is the
+    pacing handle — unlike the donated state, callers may block on it.
+    """
+    V = bank.dims.n_variants
+    total = V * n_var
     ndev = int(mesh.devices.size)
     assert chunk % ndev == 0, (chunk, ndev)
     shard = chunk // ndev
     bp = min(block_points, shard)
-    kk = min(k, shard)          # per-shard candidates (bounded by shard)
-    # the running state keeps the FULL k: the true top-k accumulates
-    # across chunks, so truncating to the chunk size would drop ranks
-    probe = jax.eval_shape(lambda p: fn(p, keep_unit_energies=False),
-                           make_points(plan, ndev))
-    out_keys = sorted(probe)
+    kk = min(k, shard)          # a shard only holds `shard` candidates
+    _, fn_uniform = build_banked_eval(bank.dims)
+    out_keys = list(OUT_KEYS)      # fixed schema; no eval_shape probe
     if metric not in out_keys:
         raise KeyError(f"unknown stream metric {metric!r}; valid: "
                        f"{out_keys}")
 
-    def shard_body(pts: DesignPoints, valid: jnp.ndarray):
-        out = fn(pts, keep_unit_energies=False)
-        ok = out["feasible"].astype(bool) & valid
+    def shard_body(start, limit, tables, bank_arrays):
+        six = jax.lax.axis_index("batch").astype(idx_dtype)
+        s0 = start + six * shard
+        # one decode block per shard: the kernel is gather-bound, so
+        # grid iterations only add interpreter dispatch overhead
+        vals, _vid = grid_decode(tables, s0, shape=shape, n_var=n_var,
+                                 total=total, chunk=shard,
+                                 block_points=shard, idx_dtype=idx_dtype)
+        flat = s0 + jnp.arange(shard, dtype=idx_dtype)
+        valid = flat < limit
+        v = (start // n_var).astype(jnp.int32)   # chunk-uniform variant
+        points = DesignPoints(
+            cis_node=vals[0], soc_node=vals[1],
+            mem_tech=vals[2].astype(jnp.int32), sys_rows=vals[3],
+            sys_cols=vals[4], frame_rate=vals[5],
+            active_fraction_scale=vals[6], pixel_pitch_um=vals[7])
+        out = fn_uniform(bank_arrays, v, points)
+        ok = out["feasible"] & valid
         metric_v = out[metric].astype(jnp.float32)
-        vals = jnp.where(ok, metric_v, jnp.inf)
-        offset = (jax.lax.axis_index("batch") * shard).astype(jnp.int32)
 
-        # per-shard summary partials: Pallas segment-min/sum
+        # per-shard summary partials: Pallas segment-min/sum, folded to
+        # scalars in-body so only O(k) values cross the mesh
         mins, amins, sums, counts = block_stats(metric_v, ok,
                                                 block_points=bp)
-        amin_i = (offset + jnp.arange(len(mins), dtype=jnp.int32) * bp
-                  + amins)
+        g = jnp.argmin(mins)
+        amin_i = s0 + (g.astype(jnp.int32) * bp
+                       + amins[g]).astype(idx_dtype)
 
-        # per-shard top-k candidates (ascending; invalids are +inf)
-        neg, pos = jax.lax.top_k(-vals, kk)
+        # per-shard global top-k candidates (ascending; invalids +inf)
+        neg, pos = jax.lax.top_k(jnp.where(ok, -metric_v, -jnp.inf), kk)
         return dict(
             cand_v=-neg,
-            cand_i=offset + pos.astype(jnp.int32),
+            cand_i=flat[pos],
             cand_out=jnp.stack([out[key][pos].astype(jnp.float32)
                                 for key in out_keys], axis=1),
-            mins=mins, amin_i=amin_i, sums=sums, counts=counts,
-            n_valid=jnp.sum(valid.astype(jnp.int32))[None],
-        )
+            mins=mins[g][None], amin_i=amin_i[None],
+            sums=jnp.sum(sums)[None],
+            counts=jnp.sum(counts)[None])
 
     partial_keys = ("cand_v", "cand_i", "cand_out", "mins",
-                    "amin_i", "sums", "counts", "n_valid")
-    sharded = jax.jit(shard_map(shard_body, mesh=mesh,
-                                in_specs=(_POINT_SPECS, _BATCH_SPEC),
-                                out_specs={key: _BATCH_SPEC
-                                           for key in partial_keys}))
+                    "amin_i", "sums", "counts")
+    in_specs = (P(), P(), P(),
+                jax.tree.map(lambda _: P(), bank.arrays))
+    sharded = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                        out_specs={key: _BATCH_SPEC
+                                   for key in partial_keys})
 
-    # NOTE: the merge is deliberately a SEPARATE jit.  Fusing it into the
-    # sharded program makes GSPMD partition the whole step around the
-    # tiny replicated update and roughly doubles the per-chunk wall time
-    # (measured on the 8-device forced-host CPU mesh); as its own program
-    # it costs microseconds on O(ndev * (k+G)) partials.
-    def merge(c: Dict[str, jnp.ndarray], base_index: jnp.ndarray,
+    def merge(c: Dict[str, jnp.ndarray], start,
               state: Dict[str, jnp.ndarray]):
-        g = jnp.argmin(c["mins"])
-        c_min = c["mins"][g]
-        c_arg = c["amin_i"][g]
+        v = (start // n_var).astype(jnp.int32)
+        s = jnp.argmin(c["mins"])                 # first-min shard wins
+        c_min = c["mins"][s]
+        c_arg = c["amin_i"][s]
         merged_v = jnp.concatenate([state["topk_v"], c["cand_v"]])
         neg2, sel = jax.lax.top_k(-merged_v, k)
+        old_min = state["metric_min"][v]
         return dict(
             topk_v=-neg2,
-            topk_i=jnp.concatenate(
-                [state["topk_i"], base_index + c["cand_i"]])[sel],
+            topk_i=jnp.concatenate([state["topk_i"], c["cand_i"]])[sel],
             topk_out=jnp.concatenate([state["topk_out"],
                                       c["cand_out"]])[sel],
-            n=state["n"] + jnp.sum(c["n_valid"]),
-            n_feasible=state["n_feasible"]
-            + jnp.sum(c["counts"]).astype(jnp.int32),
-            metric_sum=state["metric_sum"] + jnp.sum(c["sums"]),
-            metric_min=jnp.minimum(state["metric_min"], c_min),
-            argmin=jnp.where(c_min < state["metric_min"],
-                             base_index + c_arg, state["argmin"]),
+            n_feasible=state["n_feasible"].at[v].add(
+                jnp.sum(c["counts"]).astype(state["n_feasible"].dtype)),
+            metric_sum=state["metric_sum"].at[v].add(jnp.sum(c["sums"])),
+            metric_min=state["metric_min"].at[v].min(c_min),
+            argmin=state["argmin"].at[v].set(
+                jnp.where(c_min < old_min, c_arg, state["argmin"][v])),
         )
 
-    return sharded, jax.jit(merge, donate_argnums=(2,)), out_keys
+    def chunk_step(start, limit, tables, bank_arrays, state):
+        c = sharded(start, limit, tables, bank_arrays)
+        return merge(c, start, state), c["counts"]
+
+    return chunk_step, out_keys
+
+
+def _banked_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
+                 block_points: int, shape: Tuple[int, ...], n_var: int,
+                 lmax: int, idx_dtype, tables):
+    """The cached fused chunk AOT executable for this sweep SHAPE."""
+    key = ("banked", _mesh_key(mesh), chunk, metric, k, block_points,
+           tuple(bank.dims), tuple(shape), n_var, lmax,
+           jnp.dtype(idx_dtype).name)
+    hit = _STREAM_CACHE.get(key)
+    if hit is not None:
+        _STREAM_STATS["hits"] += 1
+        return hit
+    chunk_step, out_keys = _banked_step(bank, mesh, metric, k, chunk,
+                                        block_points, shape, n_var,
+                                        idx_dtype)
+    zero = jnp.asarray(0, idx_dtype)
+    state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
+                                idx_dtype)
+    # on CPU the expensive LLVM passes buy nothing measurable for this
+    # program but cost ~15% of the XLA wall time (benchmarked on the
+    # 8-device forced-host lane); TPU/GPU keep their defaults
+    opts = ({"xla_llvm_disable_expensive_passes": True}
+            if jax.default_backend() == "cpu" else None)
+    exe = jax.jit(chunk_step, donate_argnums=(4,)).lower(
+        zero, zero, tables, bank.arrays, state0).compile(
+        compiler_options=opts)
+    _STREAM_STATS["step_compiles"] += 1
+    # warm the dispatch path on a no-op chunk: limit=0 makes every point
+    # invalid, so counts are 0, every candidate metric is +inf and the
+    # state is semantically untouched
+    state0, counts = exe(zero, zero, tables, bank.arrays, state0)
+    jax.block_until_ready(counts)
+    entry = (exe, out_keys)
+    _STREAM_CACHE[key] = entry
+    return entry
 
 
 @dataclasses.dataclass
@@ -245,9 +361,11 @@ class StreamResult:
 
     ``topk`` rows are ascending by the stream metric and carry the exact
     grid axis values (f64, reconstructed from the flat index) plus every
-    model output (f32, gathered on device).  ``summaries`` maps variant ->
-    ``{n, n_feasible, metric_min, metric_mean, argmin_index,
-    argmin_point}`` where the mean is over feasible points only.
+    model output (f32, gathered on device) and the owning ``algorithm`` /
+    ``variant``.  ``summaries`` maps variant label (``variant`` or
+    ``algo/variant`` for multi-algorithm sweeps) to ``{n, n_feasible,
+    metric_min, metric_mean, argmin_index, argmin_point}`` where the mean
+    is over feasible points only.
     """
     algorithm: str
     metric: str
@@ -261,6 +379,9 @@ class StreamResult:
     wall_s: float = 0.0
     compile_s: float = 0.0
     eval_s: float = 0.0
+    n_variants: int = 0
+    index_lo: int = 0
+    index_hi: int = 0
 
     @property
     def points_per_sec(self) -> float:
@@ -271,148 +392,169 @@ class StreamResult:
         """Top-k rows by the stream metric (ascending), feasible only."""
         return self.topk[:k]
 
+    def best_by_algorithm(self) -> Dict[str, Dict]:
+        """Per-algorithm best variant by the stream metric.
 
-def sweep_stream(algorithm: str = "edgaze",
+        Returns ``{algorithm: {"variant", "summary", "n_feasible"}}``:
+        ``summary`` is the winning variant's summary entry (its
+        ``metric_min``/``argmin_point`` describe the best design;
+        ``argmin_point`` is None when nothing was feasible) and
+        ``n_feasible`` sums over all the algorithm's variants.  Unlike
+        ``topk``, every algorithm is guaranteed a record.
+        """
+        groups: Dict[str, Dict[str, Dict]] = {}
+        for label, summ in self.summaries.items():
+            algo, _, variant = label.rpartition("/")
+            groups.setdefault(algo or self.algorithm, {})[variant] = summ
+        out: Dict[str, Dict] = {}
+        for algo, subs in groups.items():
+            variant, summ = min(subs.items(),
+                                key=lambda kv: kv[1]["metric_min"])
+            out[algo] = dict(variant=variant, summary=summ,
+                             n_feasible=sum(v["n_feasible"]
+                                            for v in subs.values()))
+        return out
+
+
+def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
                  grids: Optional[Dict[str, Sequence]] = None, *,
                  soc_node: int = 22, chunk_size: int = 1 << 18,
                  metric: str = "total_j", k: int = 16, mesh=None,
                  block_points: int = 4096,
-                 progress: Optional[Callable[[int, int], None]] = None
-                 ) -> StreamResult:
-    """Stream a cartesian sweep of any size through bounded memory.
+                 progress: Optional[Callable[[int, int], None]] = None,
+                 index_range: Optional[Tuple[int, int]] = None,
+                 pipeline_depth: int = 4) -> StreamResult:
+    """Stream a cartesian sweep of any size through ONE executable.
 
     Same ``grids`` contract as ``sweep()`` (``variant`` + numeric axes;
-    missing axes default per variant), but the full result table is never
-    built: each ``chunk_size`` slice of the grid is evaluated sharded
-    across ``mesh`` (default: all visible devices) and reduced on device
-    into a running top-k by ``metric`` plus per-variant summaries.  Host
-    memory is O(chunk_size); device state is O(k).
+    missing axes default per variant), but ``algorithm`` may also be a
+    list (e.g. ``["edgaze", "rhythmic"]``) — every variant of every
+    algorithm is stacked into one :class:`~repro.core.plan_bank.PlanBank`
+    and interleaved in a single variant-major flat index space.  Each
+    chunk dispatch ships one scalar; points are decoded, evaluated and
+    reduced on device (running top-k by ``metric`` + per-variant
+    summaries).  Host memory is O(1) per chunk; device state is O(k + V).
 
-    Chunk-size guidance: pick a power of two large enough to amortize
-    dispatch (~1e5-1e6 points; the default 1<<18 sustains >~80 % of peak
-    on CPU hosts) — it is rounded up to a device-divisible size and every
-    chunk (including the grid tail) is padded to exactly that shape, so
-    each variant compiles ONE executable.  ``progress(done, total)`` is
-    invoked after every chunk.
+    ``chunk_size`` is rounded up to a device-divisible size and every
+    chunk runs at exactly that shape, so the whole sweep compiles ONE
+    fused step+merge executable total (asserted via
+    :func:`stream_cache_info` in tests); re-runs with the same shapes hit
+    the executable cache even across re-gridding.  Grids of >= 2**31
+    points stream with int64 indices automatically.  ``index_range=(lo,
+    hi)`` streams only that slice of the flat index space (multi-host
+    partitioning hook); ``progress(done, span)`` fires after every chunk.
     """
     t_start = time.perf_counter()
     if mesh is None:
         mesh = make_batch_mesh()
     ndev = int(mesh.devices.size)
     chunk = -(-max(int(chunk_size), 1) // ndev) * ndev
-    variants, grids = _normalize_grids(algorithm, grids)
+    algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
     timings = {"compile_s": 0.0, "eval_s": 0.0}
 
-    plans: Dict[str, EnergyPlan] = {}
-    vgrids: Dict[str, ChunkedGrid] = {}
-    states: Dict[str, Dict] = {}
-    out_keys: List[str] = []
-    n_var: Optional[int] = None
-    for variant in variants:
-        plan = lower_variant(algorithm, variant, soc_node=soc_node)
-        grid = variant_grid(plan, grids)
-        if n_var is None:
-            n_var = len(grid)
-        assert len(grid) == n_var, (variant, len(grid), n_var)
-        plans[variant], vgrids[variant] = plan, grid
-    total = n_var * len(variants)
-    if total * 1.0 >= 2 ** 31:
-        raise ValueError(f"{total} points overflow int32 stream indices")
+    t0 = time.perf_counter()
+    labels: List[str] = []
+    valgos: List[str] = []
+    vnames: List[str] = []
+    plans: List[EnergyPlan] = []
+    vgrids: List = []
+    for algo in algos:
+        variants, ngrids = _normalize_grids(algo, grids)
+        for variant in variants:
+            plans.append(lower_variant(algo, variant, soc_node=soc_node))
+            labels.append(variant if len(algos) == 1
+                          else f"{algo}/{variant}")
+            valgos.append(algo)
+            vnames.append(variant)
+            vgrids.append(variant_grid(plans[-1], ngrids))
+    if not all(g.shape == vgrids[0].shape for g in vgrids):
+        raise ValueError(f"variant grids disagree on shape: "
+                         f"{[g.shape for g in vgrids]}")
+    n_var = len(vgrids[0])
+    n_variants = len(plans)
+    total = n_variants * n_var
+    lo, hi = (0, total) if index_range is None else map(int, index_range)
+    if not 0 <= lo <= hi <= total:
+        raise ValueError(f"index_range {(lo, hi)} outside [0, {total}]")
+    # int32 must hold start + chunk - 1 BEFORE tail clamping/masking, so
+    # the widen decision accounts for the final chunk's overshoot — at
+    # total in (2**31 - chunk, 2**31) the tail additions would wrap
+    # negative and sneak past the `flat < limit` mask otherwise
+    wide = total + chunk >= 2 ** 31
+    idx_dtype = jnp.int64 if wide else jnp.int32
 
-    done = 0
-    for vi, variant in enumerate(variants):
-        plan, grid = plans[variant], vgrids[variant]
-        t0 = time.perf_counter()
-        if plan._exec_cache is None:
-            plan._exec_cache = {}
-        cache_key = ("stream", _mesh_key(mesh), chunk, metric, k,
-                     block_points)
-        hit = plan._exec_cache.get(cache_key)
-        if hit is not None:
-            compiled_body, merge, out_keys = hit
-            state = _init_state(k, len(out_keys))
-        else:
-            body, merge, out_keys = _make_stream_step(
-                plan, mesh, metric, k, chunk, block_points)
-            state = _init_state(k, len(out_keys))
-            example = (make_points(plan, chunk), jnp.zeros((chunk,), bool))
-            compiled_body = body.lower(*example).compile()
-            # Warm the merge jit on real sharded partials so its compiles
-            # (initial-state sharding, then steady-state sharding) land in
-            # compile_s, not in the first chunks' eval time.  An
-            # all-invalid chunk is a semantic no-op on the state, so
-            # warming mutates nothing: counts are 0 and every candidate
-            # metric is +inf.
-            c0 = compiled_body(*example)
-            state = merge(c0, jnp.int32(0), state)
-            state = merge(c0, jnp.int32(0), state)
-            jax.block_until_ready(state["n"])
-            plan._exec_cache[cache_key] = (compiled_body, merge, out_keys)
+    with x64_context(wide):
+        tables = jnp.asarray(axis_tables(vgrids))
+        bank = build_plan_bank(plans)
+        exe, out_keys = _banked_exec(
+            bank, mesh, metric, k, chunk, block_points, vgrids[0].shape,
+            n_var, int(tables.shape[2]), idx_dtype, tables)
+        state = _init_banked_state(k, len(out_keys), n_variants, idx_dtype)
         timings["compile_s"] += time.perf_counter() - t0
 
-        base = vi * n_var
         t0 = time.perf_counter()
         inflight: List = []
-        for start, flat in grid.chunks(chunk):
-            n = len(flat[AXES[0]])
-            if n < chunk:                      # grid tail: pad + mask
-                flat = {ax: np.concatenate(
-                    [v, np.full(chunk - n, v[-1])]) for ax, v in flat.items()}
-            points = make_points(plan, chunk, **flat)
-            valid = jnp.arange(chunk) < n
-            c = compiled_body(points, valid)
-            state = merge(c, jnp.int32(base + start), state)
-            # keep a couple of chunks in flight so the next chunk's host
-            # prep (unravel/pad/make_points) overlaps device execution,
-            # without letting dispatch run unboundedly ahead of it; pace
-            # on the body partials — the state itself is donated to the
-            # next merge and cannot be blocked on
-            inflight.append(c["n_valid"])
-            if len(inflight) > 2:
-                jax.block_until_ready(inflight.pop(0))
-            done += n
-            if progress is not None:
-                progress(done, total)
-        jax.block_until_ready(state["n"])
+        done = 0
+        # chunks are aligned to variant boundaries so each one is
+        # variant-uniform (the evaluator broadcasts one coefficient row);
+        # `limit` masks both the variant end and the index_range end
+        for vi in range(n_variants):
+            vlo = max(lo, vi * n_var)
+            vhi = min(hi, (vi + 1) * n_var)
+            if vlo >= vhi:
+                continue
+            limit_dev = jnp.asarray(vhi, idx_dtype)
+            for start in range(vlo, vhi, chunk):
+                state, counts = exe(jnp.asarray(start, idx_dtype),
+                                    limit_dev, tables, bank.arrays, state)
+                # pace on the counts partial so upcoming dispatches
+                # overlap device execution without running unboundedly
+                # ahead; the state itself is donated to the next chunk
+                # and cannot be blocked on
+                inflight.append(counts)
+                if len(inflight) > pipeline_depth:
+                    jax.block_until_ready(inflight.pop(0))
+                done += min(start + chunk, vhi) - start
+                if progress is not None:
+                    progress(done, hi - lo)
+        jax.block_until_ready(state["n_feasible"])
         timings["eval_s"] += time.perf_counter() - t0
-        states[variant] = jax.device_get(state)
+        host = jax.device_get(state)
+    # per-variant valid counts are range arithmetic on the variant-major
+    # flat index space — never computed on device
+    n_seen = _variant_span_counts(lo, hi, n_var, n_variants)
 
     # ----- host-side finalization (all O(k) / O(variants)) ----------------
     summaries: Dict[str, Dict] = {}
     n_feasible = 0
-    for variant in variants:
-        st, grid = states[variant], vgrids[variant]
-        nf = int(st["n_feasible"])
+    for vi, label in enumerate(labels):
+        nf = int(host["n_feasible"][vi])
         n_feasible += nf
-        amin = int(st["argmin"])
-        summaries[variant] = dict(
-            n=int(st["n"]), n_feasible=nf,
-            metric_min=float(st["metric_min"]),
-            metric_mean=(float(st["metric_sum"]) / nf if nf
+        amin = int(host["argmin"][vi])
+        summaries[label] = dict(
+            n=int(n_seen[vi]), n_feasible=nf,
+            metric_min=float(host["metric_min"][vi]),
+            metric_mean=(float(host["metric_sum"][vi]) / nf if nf
                          else float("nan")),
             argmin_index=amin % n_var if amin >= 0 else -1,
-            argmin_point=(grid.point(amin % n_var) if amin >= 0 else None))
+            argmin_point=(vgrids[vi].point(amin % n_var)
+                          if amin >= 0 else None))
 
     rows: List[Dict] = []
-    all_v = np.concatenate([states[v]["topk_v"] for v in variants])
-    all_i = np.concatenate([states[v]["topk_i"] for v in variants])
-    all_out = np.concatenate([states[v]["topk_out"] for v in variants])
-    all_var = np.repeat(np.arange(len(variants)),
-                        [len(states[v]["topk_v"]) for v in variants])
-    for j in np.argsort(all_v, kind="stable")[:k]:
-        if not np.isfinite(all_v[j]):
+    for j in range(len(host["topk_v"])):
+        if not np.isfinite(host["topk_v"][j]):
             break                              # fewer than k feasible points
-        variant = variants[int(all_var[j])]
-        local = int(all_i[j]) - int(all_var[j]) * n_var
-        row = dict(variant=variant, index=local,
-                   **vgrids[variant].point(local))
-        row.update({key: float(all_out[j][c])
+        vi, local = divmod(int(host["topk_i"][j]), n_var)
+        row = dict(variant=vnames[vi], algorithm=valgos[vi], index=local,
+                   **vgrids[vi].point(local))
+        row.update({key: float(host["topk_out"][j][c])
                     for c, key in enumerate(out_keys)})
         rows.append(row)
 
     return StreamResult(
-        algorithm=algorithm, metric=metric, k=k, n_points=total,
+        algorithm="+".join(algos), metric=metric, k=k, n_points=hi - lo,
         n_feasible=n_feasible, n_devices=ndev, chunk_size=chunk,
         topk=rows, summaries=summaries,
         wall_s=time.perf_counter() - t_start,
-        compile_s=timings["compile_s"], eval_s=timings["eval_s"])
+        compile_s=timings["compile_s"], eval_s=timings["eval_s"],
+        n_variants=n_variants, index_lo=lo, index_hi=hi)

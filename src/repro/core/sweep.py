@@ -220,6 +220,25 @@ def variant_grid(plan: EnergyPlan, grids: Dict[str, Sequence]) -> ChunkedGrid:
     return ChunkedGrid({ax: grids.get(ax, [defaults[ax]]) for ax in AXES})
 
 
+def axis_tables(grids: List[ChunkedGrid]) -> np.ndarray:
+    """Stack per-variant axis values into a ``(V, n_axes, Lmax)`` f32 bank.
+
+    The on-device grid decoder (``repro.kernels.grid_decode``) gathers
+    axis values from this table; variants share the grid SHAPE (swept axes
+    come from one ``grids`` dict) but may differ in the single-value
+    defaults filling unswept axes.  The f32 cast matches ``make_points``,
+    so decoded points are bit-identical to the host path.
+    """
+    assert grids and all(g.shape == grids[0].shape for g in grids), (
+        [g.shape for g in grids])
+    lmax = max(max(s, 1) for s in grids[0].shape)
+    out = np.zeros((len(grids), len(grids[0].names), lmax), np.float32)
+    for vi, g in enumerate(grids):
+        for a, vals in enumerate(g.values):
+            out[vi, a, : len(vals)] = vals.astype(np.float32)
+    return out
+
+
 def _variant_meta(plan: EnergyPlan) -> Dict:
     return dict(
         hw_name=plan.hw_name, notes=plan.notes,

@@ -76,6 +76,66 @@ def block_stats(values: jax.Array, mask: jax.Array,
     return stats[:, 0], amin[:, 0], stats[:, 1], stats[:, 2]
 
 
+def _stats_banked_kernel(v_ref, m_ref, g_ref, s_ref, a_ref, *, n_variants):
+    v = v_ref[...].astype(jnp.float32)
+    m = m_ref[...] != 0
+    gid = g_ref[...]
+    for w in range(n_variants):
+        mw = m & (gid == w)
+        masked = jnp.where(mw, v, jnp.inf)
+        s_ref[0, 3 * w + 0] = jnp.min(masked)
+        s_ref[0, 3 * w + 1] = jnp.sum(jnp.where(mw, v, 0.0))
+        s_ref[0, 3 * w + 2] = jnp.sum(mw.astype(jnp.float32))
+        a_ref[0, w] = jnp.argmin(masked).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_variants", "block_points",
+                                             "interpret"))
+def block_stats_banked(values: jax.Array, mask: jax.Array,
+                       variant: jax.Array, n_variants: int,
+                       block_points: int = 4096, interpret: bool = None):
+    """Per-(block, variant) masked stats over a ``[B]`` metric vector.
+
+    The banked mega-sweep interleaves every structural variant in one
+    stream, so the per-chunk reduction must keep per-variant partials:
+    each block emits, for every variant id ``w``, the masked min, block-
+    relative argmin, sum and count of the points carrying that id.
+    Returns ``(mins, argmins, sums, counts)``, each ``[G, V]``.  Padding
+    rows carry ``variant = -1`` and match no id.
+    """
+    (b,) = values.shape
+    assert mask.shape == (b,) and variant.shape == (b,), (
+        values.shape, mask.shape, variant.shape)
+    block_points = max(min(block_points, b), 1)
+    pad = (-b) % block_points
+    if pad:
+        values = jnp.pad(values, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+        variant = jnp.pad(variant, (0, pad), constant_values=-1)
+    g = (b + pad) // block_points
+    stats, amin = pl.pallas_call(
+        functools.partial(_stats_banked_kernel, n_variants=n_variants),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, block_points), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_points), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_points), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 3 * n_variants), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_variants), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, 3 * n_variants), jnp.float32),
+            jax.ShapeDtypeStruct((g, n_variants), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(values.astype(jnp.float32).reshape(g, block_points),
+      mask.astype(jnp.int32).reshape(g, block_points),
+      variant.astype(jnp.int32).reshape(g, block_points))
+    return stats[:, 0::3], amin, stats[:, 1::3], stats[:, 2::3]
+
+
 def masked_stats(values: jax.Array, mask: jax.Array,
                  block_points: int = 4096):
     """Global ``{min, argmin, sum, count}`` of the masked ``[B]`` vector.

@@ -171,6 +171,162 @@ def test_stream_infeasible_points_masked_out():
 
 
 # ---------------------------------------------------------------------------
+# ISSUE 3: one-executable mega-sweeps (PlanBank + on-device decode)
+# ---------------------------------------------------------------------------
+def test_one_fused_executable_across_variants_and_reruns():
+    """A 3-variant stream compiles exactly ONE chunk executable, and
+    re-runs — even over different grid VALUES of the same shape — hit the
+    executable cache (the bank and axis tables are traced inputs)."""
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    grids = {"variant": ["2d_in", "3d_in", "2d_off"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0]}
+    stream_cache_clear()
+    st = sweep_stream("edgaze", grids, chunk_size=8, k=3)
+    info = stream_cache_info()
+    assert st.n_variants == 3
+    assert info["step_compiles"] == 1 and info["size"] == 1, info
+    st2 = sweep_stream("edgaze", grids, chunk_size=8, k=3)
+    regridded = dict(grids, cis_node=[110.0, 55.0, 22.0])
+    sweep_stream("edgaze", regridded, chunk_size=8, k=3)
+    info = stream_cache_info()
+    assert info["step_compiles"] == 1 and info["hits"] == 2, info
+    # donated state buffers stay sound across cached re-runs
+    np.testing.assert_array_equal([r["total_j"] for r in st2.topk],
+                                  [r["total_j"] for r in st.topk])
+
+
+def test_stream_multi_algorithm_single_call():
+    """One sweep_stream call banks variants of BOTH algorithms; results
+    match the per-algorithm monolithic oracles."""
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import sweep
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0],
+             "frame_rate": [15.0, 30.0, 60.0],
+             "sys_rows": [8.0, 16.0]}
+    st = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=8, k=6)
+    monos = {a: sweep(a, grids) for a in ("edgaze", "rhythmic")}
+    assert st.algorithm == "edgaze+rhythmic"
+    assert st.n_variants == 4
+    assert st.n_points == sum(len(m) for m in monos.values())
+    assert st.n_feasible == sum(
+        int(m.outputs["feasible"].astype(bool).sum())
+        for m in monos.values())
+    # global top-k equals the best rows of the union table
+    union = np.sort(np.concatenate(
+        [np.where(m.outputs["feasible"].astype(bool),
+                  m.outputs["total_j"], np.inf) for m in monos.values()]))
+    np.testing.assert_allclose([r["total_j"] for r in st.topk],
+                               union[:6], rtol=1e-6)
+    # summaries are keyed algo/variant and match per-variant tables
+    for algo, mono in monos.items():
+        for variant in ("2d_in", "3d_in"):
+            mask = mono.params["variant"] == variant
+            feas = mono.outputs["feasible"][mask].astype(bool)
+            s = st.summaries[f"{algo}/{variant}"]
+            assert s["n"] == int(mask.sum())
+            np.testing.assert_allclose(
+                s["metric_min"],
+                mono.outputs["total_j"][mask][feas].min(), rtol=1e-6)
+    # every top row carries its owning algorithm
+    assert {r["algorithm"] for r in st.topk} <= {"edgaze", "rhythmic"}
+
+
+def test_stream_index_range_partitions_compose():
+    """index_range slices of the flat stream compose to the full sweep —
+    the multi-host partitioning contract."""
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    full = sweep_stream("edgaze", grids, chunk_size=8, k=4)
+    total = full.n_points
+    cut = total // 3 + 1                   # splits inside a variant run
+    lo_part = sweep_stream("edgaze", grids, chunk_size=8, k=4,
+                           index_range=(0, cut))
+    hi_part = sweep_stream("edgaze", grids, chunk_size=8, k=4,
+                           index_range=(cut, total))
+    assert lo_part.n_points == cut and hi_part.n_points == total - cut
+    assert (lo_part.n_feasible + hi_part.n_feasible) == full.n_feasible
+    for variant in ("2d_in", "3d_in"):
+        assert (lo_part.summaries[variant]["n"]
+                + hi_part.summaries[variant]["n"]) \
+            == full.summaries[variant]["n"]
+    merged = sorted([r["total_j"] for r in lo_part.topk]
+                    + [r["total_j"] for r in hi_part.topk])[:4]
+    np.testing.assert_allclose(merged,
+                               [r["total_j"] for r in full.topk], rtol=0)
+
+
+@pytest.mark.slow
+def test_stream_int64_indices_beyond_int32_ceiling():
+    """>=2**31-point grids stream with int64 flat indices instead of
+    raising (ISSUE 3 regression); verified on a tail slice whose global
+    indices exceed int32, against the per-plan batched oracle."""
+    from repro.core.batch import evaluate_batch, make_points
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import _normalize_grids, lower_variant, \
+        variant_grid
+    grids = {"variant": ["3d_in"],
+             "cis_node": list(np.linspace(28.0, 130.0, 1500)),
+             "frame_rate": list(np.linspace(15.0, 120.0, 1500)),
+             "active_fraction_scale": list(np.linspace(0.1, 1.0, 1000))}
+    total = 1500 * 1500 * 1000
+    assert total >= 2 ** 31
+    st = sweep_stream("edgaze", grids, chunk_size=64, k=4,
+                      index_range=(total - 150, total))
+    assert st.n_points == 150
+    assert st.summaries["3d_in"]["n"] == 150
+    row = st.topk[0]
+    flat = row["index"]                    # single variant: local == flat
+    assert flat >= 2 ** 31
+    plan = lower_variant("edgaze", "3d_in")
+    _variants, ngrids = _normalize_grids("edgaze", dict(grids))
+    point = variant_grid(plan, ngrids).point(flat)
+    ref = evaluate_batch(plan, make_points(
+        plan, 1, **{ax: [val] for ax, val in point.items()}))
+    np.testing.assert_allclose(ref["total_j"][0], row["total_j"],
+                               rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_stream_int32_boundary_window_widens():
+    """total just BELOW 2**31 but with the last chunk overshooting it
+    must widen to int64 too: int32 flat math wraps negative inside the
+    tail chunk and the wrapped points sneak past the validity mask
+    (regression for the `total + chunk >= 2**31` widen condition)."""
+    from repro.core.batch import evaluate_batch, make_points
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import _normalize_grids, lower_variant, \
+        variant_grid
+    grids = {"variant": ["3d_in"],
+             "cis_node": list(np.linspace(28.0, 130.0, 1057)),
+             "sys_rows": list(np.linspace(4.0, 128.0, 18)),
+             "frame_rate": list(np.linspace(15.0, 120.0, 341)),
+             "active_fraction_scale": list(np.linspace(0.1, 1.0, 331))}
+    total = 1057 * 18 * 341 * 331
+    assert total == 2 ** 31 - 2            # in the int32 danger window
+    st = sweep_stream("edgaze", grids, chunk_size=16, k=3,
+                      index_range=(total - 6, total))
+    assert st.n_points == 6
+    assert st.summaries["3d_in"]["n"] == 6
+    assert st.n_feasible <= 6              # wrapped garbage would exceed
+    row = st.topk[0]
+    assert total - 6 <= row["index"] < total
+    plan = lower_variant("edgaze", "3d_in")
+    _variants, ngrids = _normalize_grids("edgaze", dict(grids))
+    point = variant_grid(plan, ngrids).point(row["index"])
+    ref = evaluate_batch(plan, make_points(
+        plan, 1, **{ax: [val] for ax, val in point.items()}))
+    np.testing.assert_allclose(ref["total_j"][0], row["total_j"],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Multi-device: 8 forced host devices in a subprocess
 # ---------------------------------------------------------------------------
 SCRIPT = r"""
@@ -180,7 +336,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax
 from repro.core.batch import evaluate_batch, make_points
-from repro.core.shard_sweep import evaluate_batch_sharded, sweep_stream
+from repro.core.shard_sweep import (evaluate_batch_sharded,
+                                    stream_cache_info, sweep_stream)
 from repro.core.sweep import lower_variant, sweep
 from repro.launch.mesh import make_batch_mesh
 
@@ -209,15 +366,29 @@ for key in mono.outputs:
     np.testing.assert_allclose(shard.outputs[key], mono.outputs[key],
                                rtol=1e-6, atol=0, err_msg=key)
 
-# 3. streaming top-k on the 8-device mesh vs best()
+# 3. streaming top-k on the 8-device mesh vs best(); the banked path
+#    must compile exactly ONE fused chunk executable for both variants
 st = sweep_stream("edgaze", grids, chunk_size=32, k=5, mesh=mesh)
 assert st.n_devices == 8
 assert st.n_points == len(mono)
+assert stream_cache_info()["step_compiles"] == 1, stream_cache_info()
 best = mono.best("total_j", k=5)
 np.testing.assert_allclose([r["total_j"] for r in st.topk],
                            [r["total_j"] for r in best], rtol=1e-6)
 feas = mono.outputs["feasible"].astype(bool)
 assert st.n_feasible == int(feas.sum())
+
+# 4. multi-algorithm banked stream under the 8-device mesh: one more
+#    executable (different bank dims), parity vs per-algorithm oracles
+both = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=32, k=5,
+                    mesh=mesh)
+assert stream_cache_info()["step_compiles"] == 2, stream_cache_info()
+mono_r = sweep("rhythmic", grids)
+union = np.sort(np.concatenate(
+    [np.where(m.outputs["feasible"].astype(bool),
+              m.outputs["total_j"], np.inf) for m in (mono, mono_r)]))
+np.testing.assert_allclose([r["total_j"] for r in both.topk],
+                           union[:5], rtol=1e-6)
 print("SHARD_SWEEP_OK")
 """
 
