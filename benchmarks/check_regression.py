@@ -1,0 +1,93 @@
+"""CI throughput guard: fail on a >30% mega-sweep throughput regression.
+
+Compares the LATEST ``mega_sweep`` row of ``BENCH_history.jsonl``
+(appended by the ``python benchmarks/run.py mega_sweep`` step that CI
+just ran) against a baseline built from the preceding COMPARABLE rows —
+same schema, point count, device lanes and host cpu count, so a grid
+change or a differently-sized runner never masquerades as a regression.
+The baseline is the median of up to ``--window`` prior comparable rows
+(noise tolerance: one slow historical run cannot poison the bar, one
+fast outlier cannot raise it), and the tolerance is a further 30%
+headroom below that median.
+
+Exit codes: 0 = no regression (or nothing comparable to check — the
+guard reports and passes, it never blocks the first run on a new host),
+1 = at least one throughput metric regressed beyond tolerance.
+
+CI wires this behind a ``skip-perf-guard`` PR label; locally:
+
+    python benchmarks/run.py mega_sweep && python benchmarks/check_regression.py
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+
+from run import HISTORY, HISTORY_SCHEMA, read_history
+
+#: the throughput metrics the guard watches (``mega_points_per_sec_*``)
+METRICS = ("mega_points_per_sec_1dev", "mega_points_per_sec_8dev")
+#: row keys that must match for two runs to be comparable
+COMPARABLE = ("schema", "bench", "mega_n_points", "devices", "cpus")
+
+
+def comparable(a: dict, b: dict) -> bool:
+    return all(a.get(key) == b.get(key) for key in COMPARABLE)
+
+
+def check(tolerance: float = 0.30, window: int = 3) -> int:
+    rows = [r for r in read_history("mega_sweep")
+            if r.get("schema") == HISTORY_SCHEMA]
+    if not rows:
+        print(f"perf-guard: no mega_sweep rows in {HISTORY}; "
+              f"run `python benchmarks/run.py mega_sweep` first — PASS")
+        return 0
+    current = rows[-1]
+    prior = [r for r in rows[:-1] if comparable(r, current)][-window:]
+    if not prior:
+        print("perf-guard: no comparable baseline rows "
+              f"(need matching {COMPARABLE}) — PASS (first run on this "
+              "host/grid records the baseline)")
+        return 0
+
+    failed = []
+    for metric in METRICS:
+        new = current.get(metric)
+        base_vals = [r[metric] for r in prior if metric in r]
+        if new is None or not base_vals:
+            print(f"perf-guard: {metric} missing from current or baseline "
+                  f"rows — skipped")
+            continue
+        base = statistics.median(base_vals)
+        ratio = new / base if base else float("inf")
+        verdict = "REGRESSION" if ratio < 1.0 - tolerance else "ok"
+        print(f"perf-guard: {metric} = {new:,.0f} vs median({len(base_vals)}"
+              f" runs) {base:,.0f} -> {ratio:.2f}x [{verdict}]")
+        if verdict == "REGRESSION":
+            failed.append(metric)
+    if failed:
+        print(f"perf-guard: FAIL — {failed} dropped more than "
+              f"{tolerance:.0%} below the recorded baseline "
+              f"({current.get('git_sha')} vs "
+              f"{[r.get('git_sha') for r in prior]}); "
+              "label the PR `skip-perf-guard` if this is expected")
+        return 1
+    print("perf-guard: PASS")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional drop below the baseline "
+                         "median (default 0.30)")
+    ap.add_argument("--window", type=int, default=3,
+                    help="baseline = median of up to N prior comparable "
+                         "rows (default 3)")
+    args = ap.parse_args()
+    sys.exit(check(tolerance=args.tolerance, window=args.window))
+
+
+if __name__ == "__main__":
+    main()

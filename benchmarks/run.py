@@ -227,6 +227,9 @@ def design_sweep(n_scalar_sample: int = 64,
                kernel_mode=kernel_mode())
     if emit_json:
         _update_bench_json(rec)
+        import jax
+        _append_history("design_sweep", rec,
+                        devices=jax.local_device_count())
     return [f"design_sweep,{hot_s*1e6:.0f},points={n_points}"
             f" speedup={speedup_hot:.0f}x (cold {speedup_cold:.1f}x)"
             f" scalar={scalar_us_pp:.0f}us/pt"
@@ -247,6 +250,56 @@ def _update_bench_json(rec: dict) -> None:
     merged.update(rec)
     with open(path, "w") as f:
         json.dump(merged, f, indent=1)
+
+
+#: append-only perf trajectory: BENCH_sweep.json only keeps the LATEST
+#: numbers, so until ISSUE 4 the "trajectory" was a single point.  Every
+#: bench run appends one schema-versioned row here; the CI throughput
+#: guard (benchmarks/check_regression.py) reads the tail as its baseline.
+HISTORY = os.path.join(RESULTS, "BENCH_history.jsonl")
+HISTORY_SCHEMA = 1
+
+
+def _git_sha():
+    try:
+        import subprocess
+        out = subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(__file__))
+        return out.stdout.strip() or None
+    except Exception:  # noqa: BLE001 - history rows degrade gracefully
+        return None
+
+
+def _append_history(bench: str, rec: dict, devices) -> None:
+    """Append one run record to the BENCH_history.jsonl trajectory."""
+    os.makedirs(RESULTS, exist_ok=True)
+    row = {"schema": HISTORY_SCHEMA, "ts": round(time.time(), 2),
+           "git_sha": _git_sha(), "bench": bench, "devices": devices,
+           "cpus": os.cpu_count()}
+    row.update(rec)
+    with open(HISTORY, "a") as f:
+        f.write(json.dumps(row) + "\n")
+
+
+def read_history(bench: str = None) -> List[dict]:
+    """All (optionally bench-filtered) history rows, oldest first;
+    malformed lines are skipped rather than poisoning the guard."""
+    rows = []
+    if not os.path.exists(HISTORY):
+        return rows
+    with open(HISTORY) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except ValueError:
+                continue
+            if bench is None or row.get("bench") == bench:
+                rows.append(row)
+    return rows
 
 
 # grid for the mega_sweep bench: ~1.57e6 points per structural variant,
@@ -307,6 +360,8 @@ out = {"n_devices": n_dev, "n_points": s.n_points,
        "eval_s": s.eval_s, "compile_s": s.compile_s,
        "points_per_sec": s.points_per_sec,
        "step_compiles": info["step_compiles"],
+       "engine": s.engine, "dispatches": s.dispatches,
+       "superchunk": s.superchunk, "occupancy": round(s.occupancy, 6),
        "topk": list(best.values())}
 print("MEGA_JSON:" + json.dumps(out))
 """
@@ -356,11 +411,20 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
            "mega_compile_s_1dev": round(lanes[1]["compile_s"], 2),
            "mega_compile_s_8dev": round(lanes[8]["compile_s"], 2),
            "mega_step_compiles": lanes[8]["step_compiles"],
+           "mega_engine": lanes[8]["engine"],
+           "mega_dispatches_1dev": lanes[1]["dispatches"],
+           "mega_dispatches_8dev": lanes[8]["dispatches"],
+           "mega_superchunk_8dev": lanes[8]["superchunk"],
+           "mega_occupancy_8dev": lanes[8]["occupancy"],
            "mega_device_scaling_8v1": round(scaling, 2),
            "mega_compile_cache": cache,
            "mega_best": lanes[8]["topk"]}
     if emit_json:
         _update_bench_json(rec)
+        _append_history("mega_sweep",
+                        {k: v for k, v in rec.items()
+                         if k not in ("mega_best", "mega_compile_cache")},
+                        devices=sorted(lanes))
     n = lanes[8]["n_points"]
     return [f"mega_sweep,{lanes[8]['eval_s']*1e6:.0f},points={n}"
             f" pps_1dev={lanes[1]['points_per_sec']:,.0f}"
@@ -368,6 +432,8 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
             f" scaling={scaling:.2f}x"
             f" compile_8dev={lanes[8]['compile_s']:.2f}s"
             f" executables={lanes[8]['step_compiles']}"
+            f" dispatches={lanes[8]['dispatches']}"
+            f" occupancy={lanes[8]['occupancy']:.3f}"
             f" cache_hit={cache['hit']}"]
 
 

@@ -7,16 +7,21 @@ Three levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
 2. a full design-space sweep — thousands of (node, frame rate, systolic
    geometry, memory technology, power gating, pixel pitch) points in a
    single batched evaluation, with the Pareto-style winners printed;
-3. a ONE-EXECUTABLE streaming mega-sweep — every Ed-Gaze AND Rhythmic
+3. a DEVICE-RESIDENT streaming mega-sweep — every Ed-Gaze AND Rhythmic
    variant stacked into a single PlanBank (coefficients are traced jit
-   inputs, not baked constants) and streamed through one fused
-   step+merge executable: the driver ships one scalar per chunk, design
-   points are decoded on device from the flat index (Pallas
-   ``grid_decode`` kernel), and the running top-k / per-variant
-   summaries never leave the device.  The same grids densify to ~1e6
-   points here (set MEGA_SWEEP=1 for >=1e7); the printed compile vs
-   eval split shows XLA is paid ONCE regardless of variant count.
-   Force a multi-device CPU run with
+   inputs, not baked constants) and streamed through one superchunk
+   executable: each dispatch runs many chunks under an in-executable
+   ``lax.scan``, and each chunk decodes its flat indices, evaluates the
+   banked Eqs. 1-17 and folds top-k/min/sum/count in a SINGLE fused
+   Pallas megakernel pass (``kernels/fused_sweep``) — the decoded point
+   matrix and the per-point output table never touch HBM; only O(k)
+   candidates and (V,) scalars leave the kernel, and the k winning rows
+   re-gather their outputs in a tiny second pass.  The same grids
+   densify to ~1e6 points here (set MEGA_SWEEP=1 for >=1e7); the
+   printed dispatch count and HBM-bytes-per-point show what the
+   superchunk scan + megakernel remove vs the staged PR-3 pipeline
+   (kept as the parity oracle via ``engine="staged"``).  Force a
+   multi-device CPU run with
    XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
@@ -95,8 +100,10 @@ def main():
         "mem_tech": ["sram", "sram_hp", "stt"],
         "active_fraction_scale": list(np.linspace(0.1, 1.0, 5)),
         "pixel_pitch_um": list(np.linspace(2.0, 6.0, 7 if mega else 4))}
-    # ONE call, ONE executable: all 8 Ed-Gaze + Rhythmic variants ride a
-    # shared PlanBank; points are decoded on device from the flat index
+    # ONE call, ONE executable, O(1) dispatches: all 8 Ed-Gaze + Rhythmic
+    # variants ride a shared PlanBank; each dispatch scans `superchunk`
+    # chunks inside the executable and each chunk runs the fused
+    # decode->evaluate->reduce megakernel
     s = sweep_stream(["edgaze", "rhythmic"], mega_grids,
                      chunk_size=1 << 17, k=6)
     print(f"\n=== Streaming mega-sweep: {s.n_points:,} points x "
@@ -104,6 +111,20 @@ def main():
     print(f"compile {s.compile_s:.1f}s ONCE "
           f"({stream_cache_info()['step_compiles']} executable) vs "
           f"eval {s.eval_s:.1f}s warm -> {s.points_per_sec:,.0f} points/s")
+    # dispatch + HBM audit: the PR-3 staged pipeline dispatched once per
+    # chunk and round-tripped the decoded (n_axes, B) point matrix, the
+    # variant ids and the B x n_out output table through HBM; the fused
+    # megakernel only ever writes its O(k) block partials
+    from repro.core.batch import OUT_KEYS
+    from repro.core.sweep import AXES
+    n_axes, n_out = len(AXES), len(OUT_KEYS)
+    chunks = -(-s.n_points // s.chunk_size)
+    staged_bpp = 4 * (n_axes + 1 + n_out)
+    fused_bpp = 4 * (2 * s.k + 4) * s.n_devices / s.chunk_size
+    print(f"dispatches/sweep: {chunks} staged -> {s.dispatches} fused "
+          f"(superchunk={s.superchunk}, occupancy {s.occupancy:.3f})")
+    print(f"HBM traffic:      ~{staged_bpp} B/point staged -> "
+          f"~{fused_bpp:.4f} B/point fused (candidates + scalars only)")
     for algo, rec in sorted(s.best_by_algorithm().items()):
         p = rec["summary"]["argmin_point"]
         if p is None:                      # no feasible point at all

@@ -1,15 +1,27 @@
 """Batched design-point evaluator: Eqs. 1-17 over thousands of designs.
 
-``DesignPoints`` is a struct-of-arrays pytree of swept parameters; the
-evaluator closes over one ``EnergyPlan``'s coefficient vectors, computes
-the physics per point with plain broadcast arithmetic, is ``vmap``-ed over
-the batch and ``jit``-ed into a single device call.  The per-category
-accumulation across hardware units rides the Pallas reduction kernel
-(``repro.kernels.category_reduce``), extending the row-strip idiom of
-``stencil_conv`` to the sweep hot path.
+``DesignPoints`` is a struct-of-arrays pytree of swept parameters.  The
+Eq. 1-17 physics exists in three parity-locked forms here, from most to
+least specialized:
+
+* ``_build_eval`` — the per-plan evaluator: closes over one
+  ``EnergyPlan``'s coefficient vectors (baked constants), per-point
+  arithmetic ``vmap``-ed and ``jit``-ed into a single device call, with
+  the per-category accumulation riding the Pallas ``category_reduce``
+  kernel;
+* ``build_banked_eval`` — the banked evaluator: coefficients arrive as a
+  traced ``PlanBank`` row (``plan_bank.bank_layout``), same per-point
+  arithmetic ``vmap``-ed; one executable serves every variant;
+* ``build_coeff_compute`` — the coefficient-form BLOCK compute: the same
+  banked physics vectorized ``(slots, B)`` with kernel-legal primitives
+  only, callable from inside a Pallas kernel body — this is what the
+  fused mega-sweep megakernel (``repro.kernels.fused_sweep``) evaluates
+  so per-point intermediates never reach HBM.
 
 Numerics note: evaluation runs in f32 on device (the scalar oracle is
-f64 Python); parity holds to ~1e-5 relative, asserted in tests.
+f64 Python); per-plan parity holds to ~1e-5 relative vs the oracle, and
+banked/coefficient-form parity to 1e-6 relative vs per-plan — asserted
+in tests.
 """
 from __future__ import annotations
 
@@ -283,6 +295,23 @@ def _build_eval(plan: EnergyPlan):
 # ---------------------------------------------------------------------------
 # Banked (multi-variant) evaluator: PlanBank coefficients as traced inputs
 # ---------------------------------------------------------------------------
+def row_getter(row, layout):
+    """``name -> coefficient view`` accessor into one fused bank row.
+
+    Shared by the vmap-ed banked evaluator (``row`` is a traced (W,)
+    slice) and the fused megakernel body (``row`` is a (W,) VMEM load) —
+    the single place that interprets :func:`plan_bank.bank_layout`.
+    """
+    def g(name):
+        off, shape = layout[name]
+        if not shape:
+            return row[off]
+        size = int(np.prod(shape))
+        v = row[off:off + size]
+        return v.reshape(shape) if len(shape) > 1 else v
+    return g
+
+
 def build_banked_eval(dims):
     """Evaluator ``(bank_arrays, variant_ids, points) -> outputs`` whose
     coefficients are ARGUMENTS, not baked constants.
@@ -323,14 +352,7 @@ def build_banked_eval(dims):
         return jnp.where(role == 0, cis, jnp.where(role == 1, soc, declared))
 
     def eval_one(row, pt: DesignPoints):
-        def g(name):
-            off, shape = layout[name]
-            if not shape:
-                return row[off]
-            size = int(np.prod(shape))
-            v = row[off:off + size]
-            return v.reshape(shape) if len(shape) > 1 else v
-
+        g = row_getter(row, layout)
         frame_time = 1.0 / pt.frame_rate
 
         # ----- Sec. 4.1 digital timing, data-driven over padded slots -----
@@ -470,6 +492,248 @@ def build_banked_eval(dims):
         return _outputs(per, points)
 
     return eval_bank, eval_bank_uniform
+
+
+# ---------------------------------------------------------------------------
+# Coefficient-form block compute: the fused megakernel's physics
+# ---------------------------------------------------------------------------
+def _static_log_points(table):
+    """Per-node ``(nodes, log(values))`` as static Python f32 floats."""
+    nodes, vals = table_points(table)
+    return ([np.float32(n) for n in nodes],
+            [np.float32(math.log(v)) for v in vals])
+
+
+def _piecewise_interp(x, xs, ys):
+    """Branchless clamped piecewise-linear interpolation, static knots.
+
+    Semantics of ``jnp.interp`` (endpoint clamping included) expressed as
+    a static unroll of compares + the very same per-segment ``ys[i] +
+    (delta / dx) * dy`` arithmetic, over Python-float knots — a Pallas
+    kernel body may not capture array constants, and the unroll also
+    needs no gather/searchsorted lowering on the compiled Mosaic path.
+    Inside a shared segment the result is bit-identical to
+    ``jnp.interp``; only an ``x`` landing exactly on the LAST knot can
+    differ by one ulp (clamp vs computed endpoint).
+    """
+    y = jnp.full_like(x, ys[0])
+    for i in range(len(xs) - 1):
+        t = (x - xs[i]) / (xs[i + 1] - xs[i])
+        seg = ys[i] + t * (ys[i + 1] - ys[i])
+        y = jnp.where((x >= xs[i]) & (x < xs[i + 1]), seg, y)
+    return jnp.where(x >= xs[-1], ys[-1], y)
+
+
+def _make_scale_interp(table):
+    """Geometric node-scaling lookup usable inside a Pallas kernel body."""
+    xs, ys = _static_log_points(table)
+    return lambda x: jnp.exp(_piecewise_interp(x, xs, ys))
+
+
+def _make_fom_interp():
+    """Walden-FoM lookup (log-log interpolation over the survey table)."""
+    log_r, log_e = fom_table_points()
+    xs = [np.float32(v) for v in log_r]
+    ys = [np.float32(v) for v in log_e]
+    return lambda rate: 10.0 ** _piecewise_interp(jnp.log10(rate), xs, ys)
+
+
+def _take_rows(x, idx, n, exact: bool):
+    """Gather rows ``x[idx]`` of the (n, B) slab; one-hot matmul when the
+    compiled Mosaic path cannot lower a dynamic gather."""
+    if exact:
+        return jnp.take(x, idx, axis=0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    onehot = (idx[:, None] == lane).astype(jnp.float32)
+    return jnp.dot(onehot, x)
+
+
+def _scatter_add_rows(x, idx, n, exact: bool):
+    """Scatter-add the (m, B) rows of ``x`` into an (n, B) zero slab at
+    ``idx`` (duplicates sum); transposed one-hot matmul when compiled."""
+    if exact:
+        return jnp.zeros((n, x.shape[1]), jnp.float32).at[idx].add(x)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    onehot = (idx[:, None] == lane).astype(jnp.float32)
+    return jnp.dot(onehot.T, x)
+
+
+def build_coeff_compute(dims, *, exact: bool = True):
+    """The banked Eqs. 1-17 physics as ONE block-vectorized function
+    callable from inside a Pallas kernel body.
+
+    Returns ``compute(row, pt) -> {name: (B,) array}`` where ``row`` is a
+    variant's fused ``(W,)`` coefficient row (``plan_bank.bank_layout``)
+    and ``pt`` maps every :data:`repro.core.sweep.AXES` name to a ``(B,)``
+    value vector (``mem_tech`` as its numeric code).  Unlike the vmap-ed
+    :func:`build_banked_eval` path, intermediates are laid out
+    ``(slots, B)`` with explicit broadcasting and no per-point batching
+    transform, so the whole computation stays legal inside a kernel: the
+    fused mega-sweep kernel (``repro.kernels.fused_sweep``) evaluates a
+    block of decoded points without the ``(n_axes, B)`` point matrix or
+    the ``B x n_out`` output table ever reaching HBM.
+
+    ``exact=True`` (the Pallas-interpreter / plain-jnp path) uses the
+    very same gather / scatter-add / ``jnp.interp`` ops as the staged
+    evaluator, so outputs match it to f32 elementwise roundoff;
+    ``exact=False`` swaps those for one-hot matmuls and a static
+    piecewise unroll that the compiled Mosaic path can lower.
+    The output schema is exactly :data:`OUT_KEYS`.
+    """
+    from .plan_bank import bank_layout
+    V, A, L, F, D, M = dims
+    n_c = len(CATEGORIES)
+    layout = bank_layout(dims)
+
+    dyn_scale = _make_scale_interp(DYNAMIC_ENERGY_SCALE)
+    leak_scale = _make_scale_interp(SRAM_LEAKAGE_PER_BIT)
+    hp_scale = _make_scale_interp(SRAM_HP_LEAKAGE_PER_BIT)
+    walden = _make_fom_interp()
+
+    def compute(row, pt):
+        g = row_getter(row, layout)
+        b = pt["frame_rate"].shape[0]
+        cis = pt["cis_node"][None, :]
+        soc = pt["soc_node"][None, :]
+
+        def node_for(role, declared):
+            r = role[:, None]
+            return jnp.where(r == 0, cis,
+                             jnp.where(r == 1, soc, declared[:, None]))
+
+        frame_time = 1.0 / pt["frame_rate"]
+
+        # ----- Sec. 4.1 digital timing over padded slots ------------------
+        if D:
+            thr = ((pt["sys_rows"] * pt["sys_cols"])[None, :]
+                   * g("d_util")[:, None])
+            cycles = jnp.where(
+                g("d_is_sys")[:, None] > 0.5,
+                jnp.ceil(g("d_macs")[:, None] / thr)
+                + (pt["sys_rows"] + pt["sys_cols"])[None, :],
+                g("d_cycles")[:, None])
+            durs = cycles / g("d_clock")[:, None]            # (D, B)
+            edge_w = g("d_edge_w")
+            edge_m = g("d_edge_mask") > 0.5
+            starts = []
+            for i in range(D):      # static unroll; DAG edges go backward
+                s_i = jnp.zeros((b,), jnp.float32)
+                for j in range(i):
+                    s_i = jnp.maximum(s_i, jnp.where(
+                        edge_m[i, j], starts[j] + edge_w[i, j] * durs[j],
+                        0.0))
+                starts.append(s_i)
+            starts = jnp.stack(starts)                       # (D, B)
+            ends = starts + durs
+            dv = g("d_valid")[:, None] > 0.5
+            t_d = (jnp.max(jnp.where(dv, ends, -jnp.inf), axis=0)
+                   - jnp.min(jnp.where(dv, starts, jnp.inf), axis=0))
+            t_d = jnp.where(jnp.any(dv), t_d, 0.0)
+        else:
+            t_d = jnp.zeros((b,), jnp.float32)
+        t_a = (frame_time - t_d) / g("n_phases")
+        feasible = t_a > 0.0
+
+        rows = []
+
+        # ----- analog rows (Eqs. 2-13) ------------------------------------
+        if A:
+            pad = t_a[None, :] * g("a_pad_coeff")[:, None]   # (A, B)
+            e_access = jnp.broadcast_to(g("a_const")[:, None], (A, b))
+            if L:
+                la = g("lin_arr").astype(jnp.int32)
+                t_cell = jnp.maximum(
+                    _take_rows(pad, la, A, exact) * g("lin_inv")[:, None],
+                    1e-12)
+                e_access = e_access + _scatter_add_rows(
+                    g("lin_coeff")[:, None] * t_cell, la, A, exact)
+            if F:
+                fa = g("fom_arr").astype(jnp.int32)
+                t_cell = jnp.maximum(
+                    _take_rows(pad, fa, A, exact) * g("fom_inv")[:, None],
+                    1e-12)
+                fom = walden(1.0 / t_cell)
+                e_access = e_access + _scatter_add_rows(
+                    g("fom_scale")[:, None] * fom, fa, A, exact)
+            rows.append(e_access * g("a_ops")[:, None])
+
+        # ----- digital compute rows (Eqs. 14-15) --------------------------
+        if D:
+            node_u = node_for(g("d_role"), g("d_node"))
+            s_u = dyn_scale(node_u)
+            rows.append(g("d_dyn")[:, None] * s_u
+                        + g("d_static")[:, None] * durs)
+
+        # ----- memory rows (Eq. 16) ---------------------------------------
+        if M:
+            node_m = node_for(g("m_role"), g("m_node"))
+            s_m = dyn_scale(node_m)
+            mt = pt["mem_tech"].astype(jnp.float32)[None, :]
+            tech = jnp.where(mt >= 0, jnp.broadcast_to(mt, (M, b)),
+                             g("m_tech")[:, None])
+            is_stt = tech == 2
+            bits = g("m_bits_pa")[:, None]
+            sram_access = (SRAM_ACCESS_ENERGY_PER_BIT_65 * bits
+                           * g("m_size_f")[:, None]) * s_m
+            read_e = jnp.where(is_stt,
+                               STT_READ_ENERGY_PER_BIT_65 * bits * s_m,
+                               sram_access)
+            write_e = jnp.where(is_stt,
+                                STT_WRITE_ENERGY_PER_BIT_65 * bits * s_m,
+                                sram_access)
+            read_e = jnp.where(jnp.isnan(g("m_read_x"))[:, None],
+                               read_e, g("m_read_x")[:, None])
+            write_e = jnp.where(jnp.isnan(g("m_write_x"))[:, None],
+                                write_e, g("m_write_x")[:, None])
+            leak_bit = jnp.where(
+                is_stt, jnp.float32(STT_LEAKAGE_PER_BIT),
+                jnp.where(tech == 1, hp_scale(node_m),
+                          leak_scale(node_m)))
+            leak = leak_bit * g("m_bits_total")[:, None]
+            leak = jnp.where(jnp.isnan(g("m_leak_x"))[:, None],
+                             leak, g("m_leak_x")[:, None])
+            reads = (g("m_reads_fixed")[:, None]
+                     + g("m_reads_dnn2")[:, None]
+                     / jnp.maximum(pt["sys_rows"], 1.0)[None, :])
+            alpha = (g("m_alpha")[:, None]
+                     * pt["active_fraction_scale"][None, :])
+            rows.append(read_e * reads + write_e * g("m_writes")[:, None]
+                        + leak * frame_time[None, :] * alpha)
+
+        # ----- communication rows (Eq. 17) --------------------------------
+        rows.append(jnp.stack([
+            jnp.broadcast_to(g("utsv_bytes") * UTSV_ENERGY_PER_BYTE, (b,)),
+            jnp.broadcast_to(g("mipi_bytes") * MIPI_CSI2_ENERGY_PER_BYTE,
+                             (b,))]))
+        unit_e = jnp.concatenate(rows, axis=0)               # (U, B)
+        red = jnp.dot(g("weights").T, unit_e)                # (C+2, B)
+
+        # ----- Sec. 6.2 power density -------------------------------------
+        analog_area = g("n_pixels") * (pt["pixel_pitch_um"] * 1e-3) ** 2
+        if M:
+            node_area = node_for(g("m_area_role"), g("m_node"))
+            cell_area = 150.0 * (node_area * 1e-6) ** 2
+            digital_area = jnp.sum(g("m_bits_total")[:, None] * cell_area,
+                                   axis=0)
+        else:
+            digital_area = jnp.zeros((b,), jnp.float32)
+        area = jnp.where(g("stacked") > 0,
+                         jnp.maximum(analog_area, digital_area),
+                         analog_area + digital_area)
+
+        out = {f"cat_{c}_j": red[i] for i, c in enumerate(CATEGORIES)}
+        out["total_j"] = red[n_c]
+        out["on_sensor_j"] = red[n_c + 1]
+        out["t_d_s"] = t_d
+        out["t_a_s"] = t_a
+        out["feasible"] = feasible
+        out["area_mm2"] = area
+        out["power_mw"] = out["on_sensor_j"] * pt["frame_rate"] * 1e3
+        out["density_mw_mm2"] = out["power_mw"] / jnp.maximum(area, 1e-9)
+        assert set(out) == set(OUT_KEYS), (sorted(out), OUT_KEYS)
+        return out
+
+    return compute
 
 
 #: the evaluators' output schema is fixed by construction — callers that

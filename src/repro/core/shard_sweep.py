@@ -1,34 +1,43 @@
-"""Sharded, streaming mega-sweeps: one executable for the whole sweep.
+"""Sharded, streaming mega-sweeps: one executable, O(1) dispatches.
 
-The PR-1 engine scores one monolithic batch per structural variant on one
-device and returns N-row tables — fine at ~2e4 points, impossible at the
-production scale the ROADMAP asks for.  PR 2 added sharding + streaming,
-but still compiled one step executable PER VARIANT (plan coefficients were
-baked constants) and re-materialized every chunk on the host
-(``np.unravel_index`` + pad + transfer).  At 8 variants the mega-sweep
-spent more time in XLA than in evaluation.  This module runs the entire
-sweep — all algorithms x all variants x all chunks — through ONE compiled
-chunk executable (sharded step + state merge fused):
+The PR-1 engine scored one monolithic batch per variant; PR 2 added
+sharding + streaming but compiled one executable per variant and
+re-materialized every chunk on the host; PR 3 banked the coefficients
+(``PlanBank``), moved grid decoding on device and fused step+merge into
+ONE executable for the whole sweep.  That left two ceilings (measured on
+the 8-forced-device bench lane): the driver still dispatched the fused
+executable once per 2^18-point chunk from a Python loop (48 dispatches
+per 1.26e7-point mega-sweep), and inside each chunk the staged
+``grid_decode`` -> ``evaluate_bank`` -> ``block_stats`` pipeline wrote
+the ``(n_axes, B)`` point matrix and the ``B x n_out`` output table to
+HBM only for the reducer to collapse them to O(k) scalars.  This module
+removes both:
 
-1. **PlanBank** — per-variant ``EnergyPlan`` coefficients are padded,
-   stacked ``(V, ...)`` and passed as traced jit inputs
-   (``repro.core.plan_bank``), so the evaluator is shape-specialized only;
-   each design point gathers its own variant's coefficient rows on device.
-2. **On-device grid decoding** — the driver dispatches a scalar ``start``
-   per chunk; the Pallas ``grid_decode`` kernel expands it into axis
-   values + variant ids by div/mod against tiny device-resident axis
-   tables.  No per-chunk host unravel, padding or point transfer — the
-   dispatch loop ships O(1) bytes per chunk and pipelines arbitrarily
-   deep (``pipeline_depth``).
-3. **Banked streaming state** — one ``(n_variants, ...)`` summary state +
-   one global running top-k, folded per chunk inside the same donated
-   executable; chunks align to variant boundaries so the wide per-chunk
-   leg rides the Pallas ``block_stats`` kernel and the per-variant slot
-   is a dynamic index.  (Fully interleaved chunks would pair the
-   mixed-variant ``plan_bank.evaluate_bank`` evaluator with the
-   ``block_stats_banked`` kernel — both exist and are parity-tested, but
-   the aligned-chunk path is faster on every measured lane because the
-   coefficient row broadcasts instead of gathering per point.)
+1. **Superchunk scan** — the per-chunk loop moves INSIDE the executable:
+   one dispatch runs ``superchunk`` consecutive chunks under a
+   ``jax.lax.scan``, each scan step deriving its chunk's ``start`` /
+   ``limit`` from the carried chunk ordinal (pure index arithmetic on
+   the variant-major flat space), with the banked state donated across
+   dispatches.  Dispatches per sweep drop from O(points / chunk) to
+   O(points / (superchunk * chunk)).
+2. **Fused megakernel** — each scan step evaluates its chunk through the
+   Pallas ``fused_sweep`` kernel: decode, banked Eq. 1-17 evaluation
+   (``repro.core.batch.build_coeff_compute``) and block top-k/sum/count
+   fold in a single pass per block, so only O(k) candidates and ``(V,)``
+   scalars ever leave the kernel.  Winning rows re-gather their full
+   output schema in an O(k) pass at finalization.
+3. **Banked streaming state** — unchanged contract: one ``(V,)`` summary
+   state + a global running top-k, merged in-body; chunks align to a
+   variant-uniform grid so each chunk broadcasts ONE bank coefficient
+   row.  ``chunk_size`` additionally clamps to the per-variant span so
+   small-variant sweeps stop dispatching masked tail work (see
+   ``StreamResult.occupancy``).
+
+The PR-3 staged path is kept verbatim as the parity oracle
+(``engine="staged"``): same grids, same state schema plus the per-chunk
+``topk_out`` maintenance, per-chunk Python dispatch.  Tests pin
+``engine="fused"`` == ``engine="staged"`` == the monolithic ``sweep()``
+oracle at rel 1e-6.
 
 Flat stream indices are variant-major (``variant = g // n_var``); they
 ride int32 and widen to int64 (scoped ``repro.compat.x64_context``) for
@@ -38,16 +47,20 @@ index space — the multi-host partitioning hook and the int64 test seam.
     res = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=1 << 18)
     res.topk[0]                        # best design point (full row)
     res.summaries["edgaze/3d_in"]      # per-variant min / mean / argmin
+    res.dispatches, res.occupancy      # O(1) dispatch + masked-work audit
     stream_cache_info()                # {"step_compiles": 1, ...}
 
-Parity: banked results match the monolithic ``sweep()`` oracle (rel tol
-1e-6; padded bank slots contribute exact zeros) — asserted in
-tests/test_shard_sweep.py under the forced 8-device host platform.
+The compiled-executable cache is LRU-capped (``set_stream_cache_limit``,
+default 16 / ``REPRO_STREAM_CACHE_LIMIT``) so long-lived processes that
+sweep many distinct grid shapes don't grow it unboundedly; evictions are
+surfaced in :func:`stream_cache_info`.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -56,18 +69,25 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map, x64_context
+from ..kernels.fused_sweep import fused_sweep_block
 from ..kernels.grid_decode import grid_decode
+from ..kernels.runtime import resolve_interpret
 from ..kernels.stream_reduce import block_stats
 from ..launch.mesh import make_batch_mesh
-from .batch import (DesignPoints, OUT_KEYS, build_banked_eval, eval_fn,
-                    make_points)
+from .batch import (DesignPoints, OUT_KEYS, build_banked_eval,
+                    build_coeff_compute, eval_fn, make_points)
 from .plan import EnergyPlan, _EXTRA_CACHES
-from .plan_bank import PlanBank, build_plan_bank
+from .plan_bank import PlanBank, build_plan_bank, evaluate_bank
 from .sweep import (AXES, _normalize_grids, axis_tables, lower_variant,
                     variant_grid)
 
 _BATCH_SPEC = P("batch")
 _POINT_SPECS = DesignPoints(*([_BATCH_SPEC] * len(DesignPoints._fields)))
+
+#: default number of chunks folded into one superchunk dispatch (the
+#: ``jax.lax.scan`` length); bounded so tiny sweeps don't trace dead scan
+#: slots and compile time stays flat
+_DEFAULT_SUPERCHUNK = 16
 
 # the on-device decoder emits axis rows in ChunkedGrid order == AXES order;
 # DesignPoints consumes them positionally
@@ -157,18 +177,24 @@ def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
 # ---------------------------------------------------------------------------
 # Banked streaming: PlanBank evaluation + on-device grid decoding
 # ---------------------------------------------------------------------------
-#: compiled (step, merge) executables keyed on SHAPES only — mesh, chunk,
-#: reduction params, bank dims, grid shape and index dtype.  Coefficients
-#: and axis values are traced inputs, so re-gridding, re-lowering or
-#: swapping algorithms with the same padded dims all hit.
-_STREAM_CACHE: Dict[tuple, tuple] = {}
-_STREAM_STATS = {"step_compiles": 0, "hits": 0}
+#: compiled step executables keyed on SHAPES only — mesh, chunk, reduction
+#: params, bank dims, grid shape, scan length and index dtype.
+#: Coefficients and axis values are traced inputs, so re-gridding,
+#: re-lowering or swapping algorithms with the same padded dims all hit.
+#: LRU-ordered: long-lived processes sweeping many distinct grid shapes
+#: evict the stalest executable instead of growing without bound.
+_STREAM_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_STREAM_STATS = {"step_compiles": 0, "hits": 0, "evictions": 0}
+_STREAM_CACHE_LIMIT = max(1, int(os.environ.get("REPRO_STREAM_CACHE_LIMIT",
+                                                "16")))
 _EXTRA_CACHES.append(_STREAM_CACHE)     # flushed by lower_cache_clear()
 
 
 def stream_cache_info() -> Dict[str, int]:
-    """Executable-cache counters for the one-executable invariant tests."""
-    return dict(_STREAM_STATS, size=len(_STREAM_CACHE))
+    """Executable-cache counters for the one-executable invariant tests
+    (plus LRU ``size`` / ``limit`` / ``evictions`` accounting)."""
+    return dict(_STREAM_STATS, size=len(_STREAM_CACHE),
+                limit=_STREAM_CACHE_LIMIT)
 
 
 def stream_cache_clear() -> None:
@@ -177,17 +203,48 @@ def stream_cache_clear() -> None:
         _STREAM_STATS[key] = 0
 
 
-def _init_banked_state(k: int, n_out: int, n_variants: int,
-                       idx_dtype) -> Dict[str, jnp.ndarray]:
-    return dict(
+def set_stream_cache_limit(limit: int) -> int:
+    """Set the LRU capacity of the step-executable cache; returns the
+    previous limit.  Shrinking evicts stalest entries immediately."""
+    global _STREAM_CACHE_LIMIT
+    old, _STREAM_CACHE_LIMIT = _STREAM_CACHE_LIMIT, max(1, int(limit))
+    while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
+        _STREAM_CACHE.popitem(last=False)
+        _STREAM_STATS["evictions"] += 1
+    return old
+
+
+def _cache_get(key):
+    hit = _STREAM_CACHE.get(key)
+    if hit is not None:
+        _STREAM_CACHE.move_to_end(key)
+        _STREAM_STATS["hits"] += 1
+    return hit
+
+
+def _cache_put(key, entry) -> None:
+    _STREAM_CACHE[key] = entry
+    _STREAM_CACHE.move_to_end(key)
+    while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
+        _STREAM_CACHE.popitem(last=False)
+        _STREAM_STATS["evictions"] += 1
+
+
+def _init_banked_state(k: int, n_out: int, n_variants: int, idx_dtype,
+                       with_out: bool = True) -> Dict[str, jnp.ndarray]:
+    state = dict(
         topk_v=jnp.full((k,), jnp.inf, jnp.float32),
         topk_i=jnp.full((k,), -1, idx_dtype),
-        topk_out=jnp.zeros((k, n_out), jnp.float32),
         n_feasible=jnp.zeros((n_variants,), idx_dtype),
         metric_sum=jnp.zeros((n_variants,), jnp.float32),
         metric_min=jnp.full((n_variants,), jnp.inf, jnp.float32),
         argmin=jnp.full((n_variants,), -1, idx_dtype),
     )
+    if with_out:
+        # the staged oracle path maintains winners' full output rows on
+        # device; the fused path re-gathers them at finalization instead
+        state["topk_out"] = jnp.zeros((k, n_out), jnp.float32)
+    return state
 
 
 def _variant_span_counts(lo: int, hi: int, n_var: int, n_variants: int
@@ -204,31 +261,54 @@ def _variant_span_counts(lo: int, hi: int, n_var: int, n_variants: int
         np.minimum(hi, base + n_var) - np.maximum(lo, base), 0)
 
 
+def _merge_candidates(c: Dict[str, jnp.ndarray], v,
+                      state: Dict[str, jnp.ndarray], k: int,
+                      with_out: bool) -> Dict[str, jnp.ndarray]:
+    """Fold one chunk's O(k) partials into the running banked state.
+
+    ``v`` is the chunk's (traced) variant slot.  All update ops are
+    neutral for an all-masked chunk (counts 0, mins +inf, candidates
+    +inf), which is what makes dead scan slots in the superchunk path
+    semantically free.
+    """
+    s = jnp.argmin(c["mins"])                 # first-min shard wins
+    c_min = c["mins"][s]
+    c_arg = c["amin_i"][s]
+    merged_v = jnp.concatenate([state["topk_v"], c["cand_v"]])
+    neg2, sel = jax.lax.top_k(-merged_v, k)
+    old_min = state["metric_min"][v]
+    out = dict(
+        topk_v=-neg2,
+        topk_i=jnp.concatenate([state["topk_i"], c["cand_i"]])[sel],
+        n_feasible=state["n_feasible"].at[v].add(
+            jnp.sum(c["counts"]).astype(state["n_feasible"].dtype)),
+        metric_sum=state["metric_sum"].at[v].add(jnp.sum(c["sums"])),
+        metric_min=state["metric_min"].at[v].min(c_min),
+        argmin=state["argmin"].at[v].set(
+            jnp.where(c_min < old_min, c_arg, state["argmin"][v])),
+    )
+    if with_out:
+        out["topk_out"] = jnp.concatenate([state["topk_out"],
+                                           c["cand_out"]])[sel]
+    return out
+
+
 def _banked_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                  block_points: int, shape: Tuple[int, ...], n_var: int,
                  idx_dtype):
-    """Build the (untraced) banked chunk step + its output key list.
+    """Build the (untraced) STAGED banked chunk step + its output keys.
 
-    The step maps ``(start, limit, tables, bank_arrays, state) ->
-    (state, counts)`` entirely on device: each shard decodes its own
-    flat-index slice, evaluates it through the banked evaluator, and
-    reduces to O(k) partials inside the shard body — only those cross
-    the mesh — before the merge folds them into the donated running
-    state.  The driver aligns chunks to variant boundaries (variants own
+    This is the PR-3 parity oracle: per chunk, the shard body runs the
+    three staged device passes — ``grid_decode`` kernel, banked
+    ``evaluate_bank`` evaluator, ``block_stats`` kernel + full-chunk
+    ``top_k`` — and the merge maintains winners' output rows on device.
+    The driver aligns chunks to variant boundaries (variants own
     contiguous runs of the variant-major flat index space), so the whole
     chunk shares one variant and its coefficient row is a broadcast
     dynamic slice of the bank — the variant index ``start // n_var``
     stays a traced value, so the executable serves every variant.
     ``limit`` masks both the variant's end and the sweep's
     ``index_range`` end.
-
-    PR 2 kept the merge as a separate executable because fusing it made
-    GSPMD partition the whole step around the replicated state update;
-    that pressure vanished once the per-chunk partials fold to scalars
-    INSIDE the shard body, and fusing now saves a dispatch + tiny-array
-    reshard per chunk (~8% wall on the 8-device forced-host lane) while
-    halving the executable count.  The extra ``counts`` output is the
-    pacing handle — unlike the donated state, callers may block on it.
     """
     V = bank.dims.n_variants
     total = V * n_var
@@ -290,31 +370,10 @@ def _banked_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                         out_specs={key: _BATCH_SPEC
                                    for key in partial_keys})
 
-    def merge(c: Dict[str, jnp.ndarray], start,
-              state: Dict[str, jnp.ndarray]):
-        v = (start // n_var).astype(jnp.int32)
-        s = jnp.argmin(c["mins"])                 # first-min shard wins
-        c_min = c["mins"][s]
-        c_arg = c["amin_i"][s]
-        merged_v = jnp.concatenate([state["topk_v"], c["cand_v"]])
-        neg2, sel = jax.lax.top_k(-merged_v, k)
-        old_min = state["metric_min"][v]
-        return dict(
-            topk_v=-neg2,
-            topk_i=jnp.concatenate([state["topk_i"], c["cand_i"]])[sel],
-            topk_out=jnp.concatenate([state["topk_out"],
-                                      c["cand_out"]])[sel],
-            n_feasible=state["n_feasible"].at[v].add(
-                jnp.sum(c["counts"]).astype(state["n_feasible"].dtype)),
-            metric_sum=state["metric_sum"].at[v].add(jnp.sum(c["sums"])),
-            metric_min=state["metric_min"].at[v].min(c_min),
-            argmin=state["argmin"].at[v].set(
-                jnp.where(c_min < old_min, c_arg, state["argmin"][v])),
-        )
-
     def chunk_step(start, limit, tables, bank_arrays, state):
         c = sharded(start, limit, tables, bank_arrays)
-        return merge(c, start, state), c["counts"]
+        v = (start // n_var).astype(jnp.int32)
+        return _merge_candidates(c, v, state, k, True), c["counts"]
 
     return chunk_step, out_keys
 
@@ -322,13 +381,12 @@ def _banked_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
 def _banked_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                  block_points: int, shape: Tuple[int, ...], n_var: int,
                  lmax: int, idx_dtype, tables):
-    """The cached fused chunk AOT executable for this sweep SHAPE."""
+    """The cached STAGED fused chunk AOT executable for this sweep SHAPE."""
     key = ("banked", _mesh_key(mesh), chunk, metric, k, block_points,
            tuple(bank.dims), tuple(shape), n_var, lmax,
            jnp.dtype(idx_dtype).name)
-    hit = _STREAM_CACHE.get(key)
+    hit = _cache_get(key)
     if hit is not None:
-        _STREAM_STATS["hits"] += 1
         return hit
     chunk_step, out_keys = _banked_step(bank, mesh, metric, k, chunk,
                                         block_points, shape, n_var,
@@ -336,14 +394,9 @@ def _banked_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     zero = jnp.asarray(0, idx_dtype)
     state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
                                 idx_dtype)
-    # on CPU the expensive LLVM passes buy nothing measurable for this
-    # program but cost ~15% of the XLA wall time (benchmarked on the
-    # 8-device forced-host lane); TPU/GPU keep their defaults
-    opts = ({"xla_llvm_disable_expensive_passes": True}
-            if jax.default_backend() == "cpu" else None)
     exe = jax.jit(chunk_step, donate_argnums=(4,)).lower(
         zero, zero, tables, bank.arrays, state0).compile(
-        compiler_options=opts)
+        compiler_options=_compiler_opts())
     _STREAM_STATS["step_compiles"] += 1
     # warm the dispatch path on a no-op chunk: limit=0 makes every point
     # invalid, so counts are 0, every candidate metric is +inf and the
@@ -351,7 +404,129 @@ def _banked_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     state0, counts = exe(zero, zero, tables, bank.arrays, state0)
     jax.block_until_ready(counts)
     entry = (exe, out_keys)
-    _STREAM_CACHE[key] = entry
+    _cache_put(key, entry)
+    return entry
+
+
+def _compiler_opts():
+    # on CPU the expensive LLVM passes buy nothing measurable for this
+    # program but cost ~15% of the XLA wall time (benchmarked on the
+    # 8-device forced-host lane); TPU/GPU keep their defaults
+    return ({"xla_llvm_disable_expensive_passes": True}
+            if jax.default_backend() == "cpu" else None)
+
+
+# ---------------------------------------------------------------------------
+# Fused engine: superchunk scan over megakernel chunk steps
+# ---------------------------------------------------------------------------
+def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
+                block_points: int, shape: Tuple[int, ...], n_var: int,
+                lmax: int, idx_dtype, s_len: int, cpv: int):
+    """Build the (untraced) superchunk scan step + its output key list.
+
+    One call evaluates ``s_len`` consecutive chunk ordinals: scan step
+    ``c`` derives its chunk's ``start`` / ``limit`` / variant slot from
+    pure index arithmetic on the variant-major flat space (``cpv`` chunk
+    ordinals per variant), runs the chunk through the fused megakernel
+    shard body, and folds the O(k) partials into the scan-carried banked
+    state.  Ordinals at or past ``c_hi`` collapse to ``limit = 0``
+    no-ops, so the trailing superchunk needs no special-casing.  Only
+    the metric rides the kernel; winners' full output rows are
+    re-gathered by the driver at finalization.
+    """
+    V = bank.dims.n_variants
+    total = V * n_var
+    ndev = int(mesh.devices.size)
+    assert chunk % ndev == 0, (chunk, ndev)
+    shard = chunk // ndev
+    interpret = resolve_interpret(None)
+    # one kernel block per shard on the interpreter (grid steps only add
+    # emulation overhead there); compiled backends tile by block_points
+    bp = shard if interpret else max(min(block_points, shard), 1)
+    kk = min(k, shard)
+    compute = build_coeff_compute(bank.dims, exact=interpret)
+    out_keys = list(OUT_KEYS)
+    if metric not in out_keys:
+        raise KeyError(f"unknown stream metric {metric!r}; valid: "
+                       f"{out_keys}")
+
+    def shard_body(start, low, limit, table2, row):
+        six = jax.lax.axis_index("batch").astype(idx_dtype)
+        s0 = start + six * shard
+        cv, cl, sums, counts = fused_sweep_block(
+            table2, row, s0, low, limit, compute=compute, metric=metric,
+            axis_names=AXES, shape=shape, n_var=n_var, total=total,
+            chunk=shard, lmax=lmax, block_points=bp, kk=kk,
+            idx_dtype=idx_dtype, interpret=interpret)
+        # fold the (G, kk) block candidates to this shard's top-kk
+        neg, pos = jax.lax.top_k(-cv.reshape(-1), kk)
+        blk = (pos // kk).astype(idx_dtype)
+        cand_i = s0 + blk * bp + cl.reshape(-1)[pos].astype(idx_dtype)
+        g = jnp.argmin(cv[:, 0])
+        amin_i = s0 + (g.astype(jnp.int32) * bp
+                       + cl[g, 0]).astype(idx_dtype)
+        return dict(
+            cand_v=-neg, cand_i=cand_i,
+            mins=cv[g, 0][None], amin_i=amin_i[None],
+            sums=jnp.sum(sums)[None], counts=jnp.sum(counts)[None])
+
+    partial_keys = ("cand_v", "cand_i", "mins", "amin_i", "sums",
+                    "counts")
+    sharded = shard_map(shard_body, mesh=mesh,
+                        in_specs=(P(), P(), P(), P(), P()),
+                        out_specs={key: _BATCH_SPEC
+                                   for key in partial_keys})
+
+    def superchunk(c0, low, hi, c_hi, tables, bank_arrays, state):
+        table2 = jnp.transpose(tables, (1, 0, 2)).reshape(
+            tables.shape[1], -1).astype(jnp.float32)
+
+        def body(st, c):
+            vi = c // cpv
+            r = c - vi * cpv
+            start = (vi * n_var + r * chunk).astype(idx_dtype)
+            limit = jnp.minimum(hi, (vi + 1) * n_var).astype(idx_dtype)
+            limit = jnp.where(c < c_hi, limit, jnp.asarray(0, idx_dtype))
+            v = jnp.clip(vi, 0, V - 1).astype(jnp.int32)
+            row = jax.lax.dynamic_index_in_dim(
+                bank_arrays["fused"], v, 0, keepdims=True)     # (1, W)
+            parts = sharded(start, low, limit, table2, row)
+            return (_merge_candidates(parts, v, st, k, False),
+                    parts["counts"])
+
+        cs = c0 + jnp.arange(s_len, dtype=idx_dtype)
+        return jax.lax.scan(body, state, cs)
+
+    return superchunk, out_keys
+
+
+def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
+                block_points: int, shape: Tuple[int, ...], n_var: int,
+                lmax: int, idx_dtype, tables, s_len: int, cpv: int):
+    """The cached superchunk AOT executable for this sweep SHAPE."""
+    key = ("fused", _mesh_key(mesh), chunk, metric, k, block_points,
+           tuple(bank.dims), tuple(shape), n_var, lmax, s_len, cpv,
+           jnp.dtype(idx_dtype).name)
+    hit = _cache_get(key)
+    if hit is not None:
+        return hit
+    superchunk, out_keys = _fused_step(bank, mesh, metric, k, chunk,
+                                       block_points, shape, n_var, lmax,
+                                       idx_dtype, s_len, cpv)
+    zero = jnp.asarray(0, idx_dtype)
+    state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
+                                idx_dtype, with_out=False)
+    exe = jax.jit(superchunk, donate_argnums=(6,)).lower(
+        zero, zero, zero, zero, tables, bank.arrays, state0).compile(
+        compiler_options=_compiler_opts())
+    _STREAM_STATS["step_compiles"] += 1
+    # warm the dispatch path on an all-dead superchunk: c_hi=0 turns
+    # every scan slot into a limit=0 no-op, leaving the state untouched
+    state0, counts = exe(zero, zero, zero, zero, tables, bank.arrays,
+                         state0)
+    jax.block_until_ready(counts)
+    entry = (exe, out_keys)
+    _cache_put(key, entry)
     return entry
 
 
@@ -361,11 +536,13 @@ class StreamResult:
 
     ``topk`` rows are ascending by the stream metric and carry the exact
     grid axis values (f64, reconstructed from the flat index) plus every
-    model output (f32, gathered on device) and the owning ``algorithm`` /
-    ``variant``.  ``summaries`` maps variant label (``variant`` or
-    ``algo/variant`` for multi-algorithm sweeps) to ``{n, n_feasible,
-    metric_min, metric_mean, argmin_index, argmin_point}`` where the mean
-    is over feasible points only.
+    model output (f32) and the owning ``algorithm`` / ``variant``.
+    ``summaries`` maps variant label (``variant`` or ``algo/variant`` for
+    multi-algorithm sweeps) to ``{n, n_feasible, metric_min, metric_mean,
+    argmin_index, argmin_point}`` where the mean is over feasible points
+    only.  ``dispatches`` counts step-executable invocations;
+    ``occupancy`` is valid points / dispatched points (masked variant
+    tails and dead superchunk slots are the difference).
     """
     algorithm: str
     metric: str
@@ -382,6 +559,10 @@ class StreamResult:
     n_variants: int = 0
     index_lo: int = 0
     index_hi: int = 0
+    engine: str = "fused"
+    dispatches: int = 0
+    superchunk: int = 1
+    occupancy: float = 1.0
 
     @property
     def points_per_sec(self) -> float:
@@ -423,32 +604,45 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
                  block_points: int = 4096,
                  progress: Optional[Callable[[int, int], None]] = None,
                  index_range: Optional[Tuple[int, int]] = None,
-                 pipeline_depth: int = 4) -> StreamResult:
+                 pipeline_depth: int = 4, engine: str = "fused",
+                 superchunk: Optional[int] = None) -> StreamResult:
     """Stream a cartesian sweep of any size through ONE executable.
 
     Same ``grids`` contract as ``sweep()`` (``variant`` + numeric axes;
     missing axes default per variant), but ``algorithm`` may also be a
     list (e.g. ``["edgaze", "rhythmic"]``) — every variant of every
     algorithm is stacked into one :class:`~repro.core.plan_bank.PlanBank`
-    and interleaved in a single variant-major flat index space.  Each
-    chunk dispatch ships one scalar; points are decoded, evaluated and
-    reduced on device (running top-k by ``metric`` + per-variant
-    summaries).  Host memory is O(1) per chunk; device state is O(k + V).
+    and interleaved in a single variant-major flat index space.  Host
+    memory is O(1) per dispatch; device state is O(k + V).
 
-    ``chunk_size`` is rounded up to a device-divisible size and every
-    chunk runs at exactly that shape, so the whole sweep compiles ONE
-    fused step+merge executable total (asserted via
-    :func:`stream_cache_info` in tests); re-runs with the same shapes hit
-    the executable cache even across re-gridding.  Grids of >= 2**31
-    points stream with int64 indices automatically.  ``index_range=(lo,
-    hi)`` streams only that slice of the flat index space (multi-host
-    partitioning hook); ``progress(done, span)`` fires after every chunk.
+    ``engine="fused"`` (default) runs the device-resident path: each
+    dispatch executes ``superchunk`` consecutive chunks under an
+    in-executable ``lax.scan`` (default auto, capped at
+    ``_DEFAULT_SUPERCHUNK``), and each chunk decodes, evaluates and
+    reduces in a single Pallas megakernel pass — the decoded point
+    matrix and per-point outputs never reach HBM, and winners re-gather
+    their full output rows in an O(k) pass at the end.
+    ``engine="staged"`` is the PR-3 parity oracle: one Python dispatch
+    per chunk through the staged decode/evaluate/reduce pipeline.
+
+    ``chunk_size`` is rounded to a device-divisible size and clamped to
+    the per-variant span (small-variant sweeps stop dispatching masked
+    tail work — see ``StreamResult.occupancy``); every chunk runs at
+    exactly that shape, so the whole sweep compiles ONE step executable
+    total (asserted via :func:`stream_cache_info` in tests); re-runs
+    with the same shapes hit the LRU executable cache even across
+    re-gridding.  Grids of >= 2**31 points stream with int64 indices
+    automatically.  ``index_range=(lo, hi)`` streams only that slice of
+    the flat index space (multi-host partitioning hook);
+    ``progress(done, span)`` fires after every dispatch.
     """
     t_start = time.perf_counter()
+    if engine not in ("fused", "staged"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"valid: ['fused', 'staged']")
     if mesh is None:
         mesh = make_batch_mesh()
     ndev = int(mesh.devices.size)
-    chunk = -(-max(int(chunk_size), 1) // ndev) * ndev
     algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
     timings = {"compile_s": 0.0, "eval_s": 0.0}
 
@@ -473,52 +667,111 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
     n_var = len(vgrids[0])
     n_variants = len(plans)
     total = n_variants * n_var
+    # device-divisible chunk, clamped to the per-variant span: chunks are
+    # variant-uniform, so any chunk budget beyond one span is masked tail
+    # work dispatched on every single chunk of a small-variant sweep
+    chunk = -(-max(int(chunk_size), 1) // ndev) * ndev
+    chunk = min(chunk, -(-n_var // ndev) * ndev)
     lo, hi = (0, total) if index_range is None else map(int, index_range)
     if not 0 <= lo <= hi <= total:
         raise ValueError(f"index_range {(lo, hi)} outside [0, {total}]")
     # int32 must hold start + chunk - 1 BEFORE tail clamping/masking, so
     # the widen decision accounts for the final chunk's overshoot — at
     # total in (2**31 - chunk, 2**31) the tail additions would wrap
-    # negative and sneak past the `flat < limit` mask otherwise
+    # negative and sneak past the validity mask otherwise
     wide = total + chunk >= 2 ** 31
     idx_dtype = jnp.int64 if wide else jnp.int32
 
+    dispatches = 0
+    dispatched_points = 0
+    s_len = 1
     with x64_context(wide):
         tables = jnp.asarray(axis_tables(vgrids))
         bank = build_plan_bank(plans)
-        exe, out_keys = _banked_exec(
-            bank, mesh, metric, k, chunk, block_points, vgrids[0].shape,
-            n_var, int(tables.shape[2]), idx_dtype, tables)
-        state = _init_banked_state(k, len(out_keys), n_variants, idx_dtype)
-        timings["compile_s"] += time.perf_counter() - t0
+        lmax = int(tables.shape[2])
 
-        t0 = time.perf_counter()
-        inflight: List = []
-        done = 0
-        # chunks are aligned to variant boundaries so each one is
-        # variant-uniform (the evaluator broadcasts one coefficient row);
-        # `limit` masks both the variant end and the index_range end
-        for vi in range(n_variants):
-            vlo = max(lo, vi * n_var)
-            vhi = min(hi, (vi + 1) * n_var)
-            if vlo >= vhi:
-                continue
-            limit_dev = jnp.asarray(vhi, idx_dtype)
-            for start in range(vlo, vhi, chunk):
-                state, counts = exe(jnp.asarray(start, idx_dtype),
-                                    limit_dev, tables, bank.arrays, state)
+        if engine == "fused":
+            # chunk ordinals: cpv chunk slots per variant, covering the
+            # whole variant span; [c_lo, c_hi) are the ordinals that
+            # intersect [lo, hi)
+            cpv = -(-n_var // chunk)
+
+            def _ordinal(f: int) -> int:
+                vi, r = divmod(f, n_var)
+                return vi * cpv + r // chunk
+
+            c_lo = _ordinal(lo)
+            c_hi = _ordinal(hi - 1) + 1 if hi > lo else c_lo
+            n_chunks = max(c_hi - c_lo, 0)
+            s_len = (max(1, int(superchunk)) if superchunk
+                     else min(max(n_chunks, 1), _DEFAULT_SUPERCHUNK))
+            exe, out_keys = _fused_exec(
+                bank, mesh, metric, k, chunk, block_points,
+                vgrids[0].shape, n_var, lmax, idx_dtype, tables, s_len,
+                cpv)
+            state = _init_banked_state(k, len(out_keys), n_variants,
+                                       idx_dtype, with_out=False)
+            timings["compile_s"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            dev = lambda v: jnp.asarray(v, idx_dtype)       # noqa: E731
+            lo_dev, hi_dev, chi_dev = dev(lo), dev(hi), dev(c_hi)
+            inflight: List = []
+            for d0 in range(c_lo, c_hi, s_len):
+                state, counts = exe(dev(d0), lo_dev, hi_dev, chi_dev,
+                                    tables, bank.arrays, state)
+                dispatches += 1
+                dispatched_points += s_len * chunk
                 # pace on the counts partial so upcoming dispatches
                 # overlap device execution without running unboundedly
-                # ahead; the state itself is donated to the next chunk
-                # and cannot be blocked on
+                # ahead; the state itself is donated to the next
+                # superchunk and cannot be blocked on
                 inflight.append(counts)
                 if len(inflight) > pipeline_depth:
                     jax.block_until_ready(inflight.pop(0))
-                done += min(start + chunk, vhi) - start
                 if progress is not None:
-                    progress(done, hi - lo)
-        jax.block_until_ready(state["n_feasible"])
-        timings["eval_s"] += time.perf_counter() - t0
+                    last = min(d0 + s_len, c_hi) - 1
+                    vi_l, r_l = divmod(last, cpv)
+                    end = min(vi_l * n_var + (r_l + 1) * chunk,
+                              vi_l * n_var + n_var, hi)
+                    progress(max(end - lo, 0), hi - lo)
+            jax.block_until_ready(state["n_feasible"])
+            timings["eval_s"] += time.perf_counter() - t0
+        else:
+            exe, out_keys = _banked_exec(
+                bank, mesh, metric, k, chunk, block_points,
+                vgrids[0].shape, n_var, lmax, idx_dtype, tables)
+            state = _init_banked_state(k, len(out_keys), n_variants,
+                                       idx_dtype)
+            timings["compile_s"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            inflight = []
+            done = 0
+            # chunks are aligned to variant boundaries so each one is
+            # variant-uniform (the evaluator broadcasts one coefficient
+            # row); `limit` masks both the variant end and the
+            # index_range end
+            for vi in range(n_variants):
+                vlo = max(lo, vi * n_var)
+                vhi = min(hi, (vi + 1) * n_var)
+                if vlo >= vhi:
+                    continue
+                limit_dev = jnp.asarray(vhi, idx_dtype)
+                for start in range(vlo, vhi, chunk):
+                    state, counts = exe(jnp.asarray(start, idx_dtype),
+                                        limit_dev, tables, bank.arrays,
+                                        state)
+                    dispatches += 1
+                    dispatched_points += chunk
+                    inflight.append(counts)
+                    if len(inflight) > pipeline_depth:
+                        jax.block_until_ready(inflight.pop(0))
+                    done += min(start + chunk, vhi) - start
+                    if progress is not None:
+                        progress(done, hi - lo)
+            jax.block_until_ready(state["n_feasible"])
+            timings["eval_s"] += time.perf_counter() - t0
         host = jax.device_get(state)
     # per-variant valid counts are range arithmetic on the variant-major
     # flat index space — never computed on device
@@ -540,11 +793,30 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
             argmin_point=(vgrids[vi].point(amin % n_var)
                           if amin >= 0 else None))
 
+    n_win = 0
+    while (n_win < len(host["topk_v"])
+           and np.isfinite(host["topk_v"][n_win])):
+        n_win += 1                             # fewer than k feasible points
+    win = [divmod(int(host["topk_i"][j]), n_var) for j in range(n_win)]
+    if engine == "fused" and n_win:
+        # tiny second pass over winners only: the megakernel never wrote
+        # the per-point output table, so the k winning rows re-gather
+        # their full output schema through the banked evaluator here
+        # (padded to k so every sweep shares one tiny executable)
+        pts_axes = {ax: [] for ax in AXES}
+        for vi, local in win + [win[-1]] * (k - n_win):
+            point = vgrids[vi].point(local)
+            for ax in AXES:
+                pts_axes[ax].append(point[ax])
+        vids = [vi for vi, _ in win] + [win[-1][0]] * (k - n_win)
+        out = evaluate_bank(bank, np.asarray(vids, np.int32),
+                            make_points(plans[0], k, **pts_axes))
+        host["topk_out"] = np.stack(
+            [np.asarray(out[key], np.float32)[:n_win]
+             for key in out_keys], axis=1)
+
     rows: List[Dict] = []
-    for j in range(len(host["topk_v"])):
-        if not np.isfinite(host["topk_v"][j]):
-            break                              # fewer than k feasible points
-        vi, local = divmod(int(host["topk_i"][j]), n_var)
+    for j, (vi, local) in enumerate(win):
         row = dict(variant=vnames[vi], algorithm=valgos[vi], index=local,
                    **vgrids[vi].point(local))
         row.update({key: float(host["topk_out"][j][c])
@@ -557,4 +829,7 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
         topk=rows, summaries=summaries,
         wall_s=time.perf_counter() - t_start,
         compile_s=timings["compile_s"], eval_s=timings["eval_s"],
-        n_variants=n_variants, index_lo=lo, index_hi=hi)
+        n_variants=n_variants, index_lo=lo, index_hi=hi,
+        engine=engine, dispatches=dispatches, superchunk=s_len,
+        occupancy=((hi - lo) / dispatched_points if dispatched_points
+                   else 1.0))

@@ -9,13 +9,15 @@ from .binning import binning
 from .category_reduce import category_reduce
 from .flash_attention import flash_attention
 from .frame_event import frame_event
-from .grid_decode import grid_decode, grid_strides
+from .fused_sweep import fused_sweep_block
+from .grid_decode import decode_axis_values, grid_decode, grid_strides
 from .matmul import matmul
 from .runtime import kernel_mode, on_tpu, resolve_interpret
 from .stencil_conv import stencil_conv
 from .stream_reduce import block_stats, block_stats_banked, masked_stats
 
 __all__ = ["ops", "ref", "binning", "block_stats", "block_stats_banked",
-           "category_reduce", "flash_attention", "frame_event",
-           "grid_decode", "grid_strides", "kernel_mode", "masked_stats",
-           "matmul", "on_tpu", "resolve_interpret", "stencil_conv"]
+           "category_reduce", "decode_axis_values", "flash_attention",
+           "frame_event", "fused_sweep_block", "grid_decode",
+           "grid_strides", "kernel_mode", "masked_stats", "matmul",
+           "on_tpu", "resolve_interpret", "stencil_conv"]

@@ -1,0 +1,133 @@
+"""Pallas kernel: fused decode -> evaluate -> reduce sweep megakernel.
+
+The PR-3 streaming step was three staged device passes per chunk —
+``grid_decode`` (flat indices -> ``(n_axes, B)`` point matrix),
+``evaluate_bank`` (points -> ``B x n_out`` output table), ``block_stats``
+(+ a full-chunk ``top_k``) — with every intermediate round-tripping
+through HBM.  At mega-sweep scale the model is a few hundred FLOPs per
+point, so the sweep is bandwidth-bound: the staged path writes and
+re-reads ~100 B of HBM per design point that the reduction immediately
+collapses to O(k) scalars.
+
+This kernel fuses the whole per-chunk pipeline into ONE pass per block:
+
+1. **decode** — the block's flat stream indices expand into axis-value
+   vectors in VMEM via the shared ``grid_decode.decode_axis_values``
+   helper (div/mod against static strides + tiny axis-table lookup);
+2. **evaluate** — the banked Eq. 1-17 physics runs on the decoded block
+   through the coefficient-form compute function
+   (``repro.core.batch.build_coeff_compute``), the chunk's fused ``(W,)``
+   coefficient row broadcasting across the block;
+3. **reduce** — the block folds to its masked metric sum / feasible
+   count and its k smallest candidates (iterative min-extract, branchless
+   — ``lax.top_k`` has no Mosaic lowering) before anything is written.
+
+Only the ``(G, k)`` candidate lists and ``(G, 2)`` stat partials ever
+leave the kernel — the decoded point matrix and the per-point output
+table never touch HBM.  Winning rows re-gather their full output schema
+in a tiny O(k) second pass at sweep finalization.
+
+Masking follows the streaming driver's contract: a point is valid iff
+``low <= flat < limit`` AND it lies inside this call's ``chunk`` span
+(blocks are padded up to ``block_points``; the spillover positions would
+otherwise double-count the next shard's points).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .grid_decode import decode_axis_values, grid_strides
+from .runtime import resolve_interpret
+
+
+def _fused_kernel(start_ref, low_ref, limit_ref, table_ref, row_ref,
+                  cv_ref, cl_ref, st_ref, *, compute, metric, axis_names,
+                  shape, strides, n_var, total, chunk, block, kk,
+                  idx_dtype, n_variants, lmax, gather):
+    i = pl.program_id(0)
+    lane = jax.lax.broadcasted_iota(idx_dtype, (1, block), 1)
+    pos = i * block + lane                      # position within the chunk
+    off = start_ref[0, 0] + pos
+    valid = ((off >= low_ref[0, 0]) & (off < limit_ref[0, 0])
+             & (pos < chunk))[0]
+    offc = jnp.minimum(off, total - 1)          # clamp tail for the decode
+    vals, _vid = decode_axis_values(
+        offc, table_ref[...], shape=shape, strides=strides, n_var=n_var,
+        block=block, n_variants=n_variants, lmax=lmax, gather=gather)
+    out = compute(row_ref[0, :], dict(zip(axis_names, vals)))
+    ok = out["feasible"] & valid
+    mv = out[metric].astype(jnp.float32)
+
+    # block-local top-k by iterative min extraction: k is tiny and static,
+    # and masking the winner with a compare keeps the loop branchless
+    masked = jnp.where(ok, mv, jnp.inf)
+    posi = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    for j in range(kk):
+        am = jnp.argmin(masked).astype(jnp.int32)
+        cv_ref[0, j] = jnp.min(masked)
+        cl_ref[0, j] = am
+        masked = jnp.where(posi == am, jnp.inf, masked)
+    st_ref[0, 0] = jnp.sum(jnp.where(ok, mv, 0.0))
+    st_ref[0, 1] = jnp.sum(ok.astype(jnp.float32))
+
+
+def fused_sweep_block(table2: jax.Array, row: jax.Array, start, low, limit,
+                      *, compute, metric: str, axis_names, shape,
+                      n_var: int, total: int, chunk: int, lmax: int,
+                      block_points: int = 4096, kk: int = 16,
+                      idx_dtype=jnp.int32, interpret: bool = None):
+    """Decode + evaluate + reduce flat indices ``[start, start + chunk)``.
+
+    ``table2`` is the pre-transposed ``(n_axes, n_variants * lmax)`` f32
+    axis-value bank, ``row`` the chunk's ``(1, W)`` fused coefficient row
+    (chunks are variant-uniform) and ``compute`` the coefficient-form
+    evaluator from :func:`repro.core.batch.build_coeff_compute` (its
+    ``exact`` flag must match this call's resolved ``interpret`` mode).
+    Returns ``(cand_v, cand_l, sums, counts)``: per-block ascending
+    candidate metric values ``(G, kk)`` (+inf-padded), their block-LOCAL
+    int32 indices ``(G, kk)`` (global flat index = ``start + g *
+    block_points + cand_l``), and the masked per-block metric sums /
+    valid counts ``(G,)``.
+    """
+    n_axes, vl = table2.shape
+    assert n_axes == len(shape) == len(axis_names), (table2.shape, shape)
+    assert vl % lmax == 0, (table2.shape, lmax)
+    bp = max(min(block_points, chunk), 1)
+    nb = -(-chunk // bp)
+    interpret = resolve_interpret(interpret)
+
+    def s2(v):
+        return jnp.asarray(v, idx_dtype).reshape(1, 1)
+
+    cv, cl, st = pl.pallas_call(
+        functools.partial(
+            _fused_kernel, compute=compute, metric=metric,
+            axis_names=tuple(axis_names), shape=tuple(shape),
+            strides=grid_strides(shape), n_var=n_var, total=total,
+            chunk=chunk, block=bp, kk=kk, idx_dtype=idx_dtype,
+            n_variants=vl // lmax, lmax=lmax, gather=interpret),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_axes, vl), lambda i: (0, 0)),
+            pl.BlockSpec((1, row.shape[-1]), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kk), lambda i: (i, 0)),
+            pl.BlockSpec((1, kk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, kk), jnp.float32),
+            jax.ShapeDtypeStruct((nb, kk), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(s2(start), s2(low), s2(limit), table2, row.reshape(1, -1))
+    return cv, cl, st[:, 0], st[:, 1]

@@ -36,6 +36,40 @@ from jax.experimental import pallas as pl
 from .runtime import resolve_interpret
 
 
+def decode_axis_values(off, table, *, shape, strides, n_var, block,
+                       n_variants, lmax, gather):
+    """Decode clamped flat indices into per-axis value vectors in-kernel.
+
+    ``off`` is a ``(1, block)`` integer array of flat stream indices
+    (already clamped to ``total - 1``); ``table`` the ``(n_axes,
+    n_variants * lmax)`` axis-value bank loaded from a kernel ref.
+    Returns ``(vals, vid32)``: a list of ``(block,)`` f32 axis-value
+    vectors in :class:`~repro.core.sweep.ChunkedGrid` axis order and the
+    ``(1, block)`` int32 variant ids.  Shared by the standalone
+    ``grid_decode`` kernel and the fused sweep megakernel
+    (``repro.kernels.fused_sweep``) so the two can never drift.
+    """
+    vid = off // n_var
+    local = off - vid * n_var
+    vid32 = vid.astype(jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n_variants * lmax), 1)
+    vals = []
+    for a in range(len(shape)):
+        idx_a = ((local // strides[a]) % shape[a]).astype(jnp.int32)
+        ci = vid32 * lmax + idx_a
+        if gather:
+            # interpreter path: a direct (block,) gather beats building
+            # block x (V * Lmax) one-hots element by element
+            vals.append(jnp.take(table[a, :], ci[0]))
+        else:
+            # compiled TPU path: table lookup as a one-hot matmul so the
+            # gather rides the MXU (same idiom as category_reduce)
+            onehot = (ci.reshape(block, 1) == lane).astype(jnp.float32)
+            col = table[a, :].reshape(n_variants * lmax, 1)
+            vals.append(jnp.dot(onehot, col)[:, 0])
+    return vals, vid32
+
+
 def _decode_kernel(start_ref, table_ref, vals_ref, vid_ref, *, shape,
                    strides, n_var, total, block, idx_dtype, n_variants,
                    lmax, gather):
@@ -43,23 +77,11 @@ def _decode_kernel(start_ref, table_ref, vals_ref, vid_ref, *, shape,
     off = (start_ref[0, 0] + i * block
            + jax.lax.broadcasted_iota(idx_dtype, (1, block), 1))
     off = jnp.minimum(off, total - 1)          # clamp tail; caller masks
-    vid = off // n_var
-    local = off - vid * n_var
-    vid32 = vid.astype(jnp.int32)
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n_variants * lmax), 1)
+    vals, vid32 = decode_axis_values(
+        off, table_ref[...], shape=shape, strides=strides, n_var=n_var,
+        block=block, n_variants=n_variants, lmax=lmax, gather=gather)
     for a in range(len(shape)):
-        idx_a = ((local // strides[a]) % shape[a]).astype(jnp.int32)
-        ci = vid32 * lmax + idx_a
-        if gather:
-            # interpreter path: a direct (block,) gather beats building
-            # block x (V * Lmax) one-hots element by element
-            vals_ref[a, :] = jnp.take(table_ref[a, :], ci[0])
-        else:
-            # compiled TPU path: table lookup as a one-hot matmul so the
-            # gather rides the MXU (same idiom as category_reduce)
-            onehot = (ci.reshape(block, 1) == lane).astype(jnp.float32)
-            col = table_ref[a, :].reshape(n_variants * lmax, 1)
-            vals_ref[a, :] = jnp.dot(onehot, col)[:, 0]
+        vals_ref[a, :] = vals[a]
     vid_ref[0, :] = vid32[0]
 
 

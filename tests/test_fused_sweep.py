@@ -1,0 +1,286 @@
+"""Fused megakernel + superchunk scan engine (ISSUE 4).
+
+Parity chain: the fused decode->evaluate->reduce megakernel and the
+in-executable superchunk scan driver (``engine="fused"``, the default)
+must match the PR-3 staged pipeline (``engine="staged"``, the parity
+oracle) — and through it the monolithic ``sweep()`` / per-plan oracles —
+at rel 1e-6 on top-k values, summaries and feasible counts, including
+``index_range`` tail slices and hypothesis-driven grid shapes.  The
+superchunk sweep must keep the one-executable invariant, and the LRU cap
+on the step-executable cache must evict (and count) instead of growing
+unboundedly.
+"""
+import numpy as np
+import pytest
+
+_REL = 1e-6
+
+
+def _assert_stream_equal(a, b, *, rtol=_REL):
+    """Topk/summaries/feasible-count equality between two StreamResults."""
+    assert a.n_points == b.n_points
+    assert a.n_feasible == b.n_feasible
+    np.testing.assert_allclose([r["total_j"] for r in a.topk],
+                               [r["total_j"] for r in b.topk], rtol=rtol)
+    assert [(r["algorithm"], r["variant"]) for r in a.topk] \
+        == [(r["algorithm"], r["variant"]) for r in b.topk]
+    assert sorted(a.summaries) == sorted(b.summaries)
+    for label, sa in a.summaries.items():
+        sb = b.summaries[label]
+        assert sa["n"] == sb["n"] and sa["n_feasible"] == sb["n_feasible"]
+        for key in ("metric_min", "metric_mean"):
+            if np.isnan(sa[key]) or np.isnan(sb[key]):
+                assert np.isnan(sa[key]) and np.isnan(sb[key]), (label, key)
+            else:
+                np.testing.assert_allclose(sa[key], sb[key], rtol=rtol,
+                                           err_msg=f"{label}.{key}")
+        assert sa["argmin_index"] == sb["argmin_index"], label
+
+
+def _engines_case(grids, *, algorithm="edgaze", chunk_size=16, k=5,
+                  index_range=None, superchunk=None):
+    from repro.core.shard_sweep import sweep_stream
+    fused = sweep_stream(algorithm, grids, chunk_size=chunk_size, k=k,
+                         index_range=index_range, superchunk=superchunk)
+    staged = sweep_stream(algorithm, grids, chunk_size=chunk_size, k=k,
+                          index_range=index_range, engine="staged")
+    assert fused.engine == "fused" and staged.engine == "staged"
+    _assert_stream_equal(fused, staged)
+    return fused, staged
+
+
+# ---------------------------------------------------------------------------
+# megakernel == staged pipeline (fixed + hypothesis-driven shapes)
+# ---------------------------------------------------------------------------
+def test_fused_matches_staged_fixed_cases():
+    """Deterministic coverage: multi-variant, tail chunks, tiny chunks."""
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0, 32.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    fused, staged = _engines_case(grids, chunk_size=13, k=7)
+    # the fused driver folds many chunks into one scan dispatch
+    assert fused.dispatches < staged.dispatches
+    # non-divisible chunking never drops nor double-counts a point
+    assert fused.n_points == 2 * 3 * 2 * 3 * 2
+
+
+def test_fused_matches_staged_multi_algorithm():
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0],
+             "frame_rate": [15.0, 60.0],
+             "sys_rows": [8.0, 32.0],
+             "mem_tech": ["sram_hp", "stt"]}
+    _engines_case(grids, algorithm=["edgaze", "rhythmic"], chunk_size=8,
+                  k=6)
+
+
+def test_fused_matches_staged_index_range_tails():
+    """index_range cuts landing inside chunks and inside variants — the
+    fused path masks a chunk's low side (ordinals are span-aligned, the
+    staged driver starts chunks exactly at the cut)."""
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    total = 2 * 3 * 2 * 2
+    for lo, hi in ((0, total), (5, total - 3), (total // 2 - 1,
+                                                total // 2 + 3)):
+        fused, _staged = _engines_case(grids, chunk_size=8, k=4,
+                                       index_range=(lo, hi))
+        assert fused.n_points == hi - lo
+
+
+def test_fused_matches_staged_property():
+    """Hypothesis sweep over grid shapes, chunk sizes, k and range cuts
+    (skips without hypothesis, mirroring the grid_decode tests)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    strategy = st.tuples(
+        st.integers(min_value=1, max_value=3),            # cis nodes
+        st.integers(min_value=1, max_value=3),            # frame rates
+        st.integers(min_value=1, max_value=2),            # sys rows
+        st.integers(min_value=1, max_value=2),            # variants
+        st.integers(min_value=1, max_value=19),           # chunk size
+        st.integers(min_value=1, max_value=6),            # k
+        st.integers(min_value=0, max_value=100),          # lo seed
+        st.integers(min_value=0, max_value=100),          # hi seed
+    )
+    cis = [130.0, 65.0, 28.0]
+    fps = [15.0, 30.0, 60.0]
+    rows = [8.0, 32.0]
+    variants = ["2d_in", "3d_in"]
+
+    @hyp.settings(max_examples=10, deadline=None)
+    @hyp.given(strategy)
+    def run(params):
+        nc, nf, nr, nv, chunk, k, lo_s, hi_s = params
+        grids = {"variant": variants[:nv], "cis_node": cis[:nc],
+                 "frame_rate": fps[:nf], "sys_rows": rows[:nr]}
+        total = nv * nc * nf * nr
+        lo = lo_s % total
+        hi = lo + 1 + (hi_s % (total - lo))
+        _engines_case(grids, chunk_size=chunk, k=k, index_range=(lo, hi))
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# superchunk scan driver == per-chunk loop driver
+# ---------------------------------------------------------------------------
+def test_superchunk_lengths_agree():
+    """Any scan length gives identical results to per-chunk dispatch
+    (superchunk=1): the in-executable loop is pure index arithmetic."""
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0]}
+    ref = sweep_stream("edgaze", grids, chunk_size=8, k=4, superchunk=1)
+    assert ref.superchunk == 1
+    for s in (2, 3, 16):
+        res = sweep_stream("edgaze", grids, chunk_size=8, k=4,
+                           superchunk=s)
+        assert res.superchunk == s
+        assert res.dispatches == -(-ref.dispatches // s)
+        _assert_stream_equal(res, ref)
+
+
+def test_superchunk_single_executable_and_dispatch_drop():
+    """The scan sweep compiles exactly ONE step executable and dispatches
+    it ceil(n_chunks / superchunk) times."""
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    grids = {"variant": ["2d_in", "3d_in", "2d_off"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0]}
+    stream_cache_clear()
+    res = sweep_stream("edgaze", grids, chunk_size=4, k=3)
+    info = stream_cache_info()
+    assert info["step_compiles"] == 1 and info["size"] == 1, info
+    # 3 variants x 12 points at chunk 4 = 9 chunks, folded into one scan
+    assert res.dispatches == 1 and res.superchunk == 9
+    res2 = sweep_stream("edgaze", grids, chunk_size=4, k=3)
+    info = stream_cache_info()
+    assert info["step_compiles"] == 1 and info["hits"] == 1, info
+    _assert_stream_equal(res2, res)
+
+
+# ---------------------------------------------------------------------------
+# occupancy accounting + small-variant chunk clamp
+# ---------------------------------------------------------------------------
+def test_occupancy_clamps_small_variant_chunks():
+    """A chunk_size far beyond the per-variant span must not dispatch
+    span-sized masked tails on every chunk: the driver clamps the chunk
+    to the span and reports the (near-)full occupancy."""
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0]}          # span = 6 per variant
+    res = sweep_stream("edgaze", grids, chunk_size=1 << 18, k=3)
+    assert res.chunk_size == 6                    # clamped to the span
+    assert res.occupancy == 1.0
+    assert res.n_points == 12
+
+
+def test_occupancy_reports_masked_tail_work():
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["2d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0, 60.0]}    # span = 9
+    for engine in ("fused", "staged"):
+        res = sweep_stream("edgaze", grids, chunk_size=4, k=3,
+                           engine=engine)
+        # 3 chunks of 4 dispatched for 9 valid points
+        assert res.occupancy == pytest.approx(9 / 12), engine
+
+
+# ---------------------------------------------------------------------------
+# LRU cap on the step-executable cache
+# ---------------------------------------------------------------------------
+def test_stream_cache_lru_eviction():
+    from repro.core.shard_sweep import (set_stream_cache_limit,
+                                        stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    base = {"variant": ["2d_in"], "cis_node": [130.0, 65.0],
+            "frame_rate": [15.0, 30.0]}
+    old = set_stream_cache_limit(2)
+    try:
+        stream_cache_clear()
+        # three distinct SHAPES (distinct k) -> three executables
+        for k in (1, 2, 3):
+            sweep_stream("edgaze", base, chunk_size=4, k=k)
+        info = stream_cache_info()
+        assert info["step_compiles"] == 3, info
+        assert info["size"] == 2 and info["limit"] == 2, info
+        assert info["evictions"] == 1, info
+        # k=3 is the freshest entry -> still cached
+        sweep_stream("edgaze", base, chunk_size=4, k=3)
+        assert stream_cache_info()["hits"] == 1
+        # k=1 was evicted -> recompiles (and evicts k=2, the new stalest)
+        sweep_stream("edgaze", base, chunk_size=4, k=1)
+        info = stream_cache_info()
+        assert info["step_compiles"] == 4 and info["evictions"] == 2, info
+    finally:
+        set_stream_cache_limit(old)
+        stream_cache_clear()
+
+
+def test_set_stream_cache_limit_shrinks_immediately():
+    from repro.core.shard_sweep import (set_stream_cache_limit,
+                                        stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    base = {"variant": ["2d_in"], "cis_node": [130.0, 65.0],
+            "frame_rate": [15.0, 30.0]}
+    old = set_stream_cache_limit(8)
+    try:
+        stream_cache_clear()
+        for k in (1, 2, 3):
+            sweep_stream("edgaze", base, chunk_size=4, k=k)
+        assert stream_cache_info()["size"] == 3
+        set_stream_cache_limit(1)
+        info = stream_cache_info()
+        assert info["size"] == 1 and info["evictions"] == 2, info
+    finally:
+        set_stream_cache_limit(old)
+        stream_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# coefficient-form compute == banked vmap evaluator (direct, no driver)
+# ---------------------------------------------------------------------------
+def test_coeff_compute_matches_banked_eval():
+    """The kernel-body physics matches the staged vmap evaluator on a
+    random mixed batch for every output key."""
+    import jax.numpy as jnp
+    from repro.core.batch import build_coeff_compute, make_points
+    from repro.core.plan_bank import build_plan_bank, evaluate_bank
+    from repro.core.sweep import lower_variant
+    plans = [lower_variant("edgaze", v)
+             for v in ("2d_in", "3d_in", "2d_in_mixed")]
+    bank = build_plan_bank(plans)
+    rng = np.random.default_rng(5)
+    n = 96
+    pts = make_points(
+        plans[0], n,
+        cis_node=rng.choice([130.0, 65.0, 28.0], n),
+        soc_node=rng.choice([14.0, 22.0], n),
+        mem_tech=rng.choice([-1, 0, 1, 2], n),
+        sys_rows=rng.choice([4.0, 16.0, 64.0], n),
+        sys_cols=rng.choice([8.0, 32.0], n),
+        frame_rate=rng.choice([15.0, 60.0, 240.0], n),
+        active_fraction_scale=rng.choice([0.25, 1.0], n),
+        pixel_pitch_um=rng.choice([2.0, 5.0], n))
+    compute = build_coeff_compute(bank.dims, exact=True)
+    for vi in range(len(plans)):
+        ref = evaluate_bank(bank, np.full(n, vi, np.int32), pts)
+        got = compute(bank.arrays["fused"][vi],
+                      {ax: jnp.asarray(getattr(pts, ax), jnp.float32)
+                       for ax in pts._fields})
+        assert sorted(got) == sorted(ref)
+        for key in ref:
+            np.testing.assert_allclose(np.asarray(got[key]), ref[key],
+                                       rtol=_REL, atol=0,
+                                       err_msg=(vi, key))

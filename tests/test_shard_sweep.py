@@ -263,10 +263,12 @@ def test_stream_index_range_partitions_compose():
 
 
 @pytest.mark.slow
-def test_stream_int64_indices_beyond_int32_ceiling():
+@pytest.mark.parametrize("engine", ["fused", "staged"])
+def test_stream_int64_indices_beyond_int32_ceiling(engine):
     """>=2**31-point grids stream with int64 flat indices instead of
     raising (ISSUE 3 regression); verified on a tail slice whose global
-    indices exceed int32, against the per-plan batched oracle."""
+    indices exceed int32, against the per-plan batched oracle — for both
+    the megakernel scan engine and the staged oracle (ISSUE 4)."""
     from repro.core.batch import evaluate_batch, make_points
     from repro.core.shard_sweep import sweep_stream
     from repro.core.sweep import _normalize_grids, lower_variant, \
@@ -278,7 +280,7 @@ def test_stream_int64_indices_beyond_int32_ceiling():
     total = 1500 * 1500 * 1000
     assert total >= 2 ** 31
     st = sweep_stream("edgaze", grids, chunk_size=64, k=4,
-                      index_range=(total - 150, total))
+                      index_range=(total - 150, total), engine=engine)
     assert st.n_points == 150
     assert st.summaries["3d_in"]["n"] == 150
     row = st.topk[0]
@@ -294,7 +296,8 @@ def test_stream_int64_indices_beyond_int32_ceiling():
 
 
 @pytest.mark.slow
-def test_stream_int32_boundary_window_widens():
+@pytest.mark.parametrize("engine", ["fused", "staged"])
+def test_stream_int32_boundary_window_widens(engine):
     """total just BELOW 2**31 but with the last chunk overshooting it
     must widen to int64 too: int32 flat math wraps negative inside the
     tail chunk and the wrapped points sneak past the validity mask
@@ -311,7 +314,7 @@ def test_stream_int32_boundary_window_widens():
     total = 1057 * 18 * 341 * 331
     assert total == 2 ** 31 - 2            # in the int32 danger window
     st = sweep_stream("edgaze", grids, chunk_size=16, k=3,
-                      index_range=(total - 6, total))
+                      index_range=(total - 6, total), engine=engine)
     assert st.n_points == 6
     assert st.summaries["3d_in"]["n"] == 6
     assert st.n_feasible <= 6              # wrapped garbage would exceed
@@ -389,6 +392,15 @@ union = np.sort(np.concatenate(
               m.outputs["total_j"], np.inf) for m in (mono, mono_r)]))
 np.testing.assert_allclose([r["total_j"] for r in both.topk],
                            union[:5], rtol=1e-6)
+
+# 5. superchunk scan vs PR-3 staged loop driver on the 8-device mesh:
+#    same results, strictly fewer executable dispatches
+stg = sweep_stream("edgaze", grids, chunk_size=32, k=5, mesh=mesh,
+                   engine="staged")
+np.testing.assert_allclose([r["total_j"] for r in st.topk],
+                           [r["total_j"] for r in stg.topk], rtol=1e-6)
+assert st.n_feasible == stg.n_feasible
+assert st.dispatches < stg.dispatches, (st.dispatches, stg.dispatches)
 print("SHARD_SWEEP_OK")
 """
 
