@@ -1,27 +1,24 @@
 """Architectural exploration: the paper's core promise, as a script.
 
-Three levels of exploration on the Ed-Gaze / Rhythmic systems (Sec. 6):
+Everything goes through ONE front door (ISSUE 5): declare a
+``DesignSpace`` (registered algorithms + axis grids) and call
+``explore()`` — it picks the right engine from the grid size and always
+returns the same ``ExploreResult`` shape:
 
-1. the paper's own tables — every variant x CIS node, now scored through
-   the batched energy engine (one lowering + one device call per variant);
-2. a full design-space sweep — thousands of (node, frame rate, systolic
-   geometry, memory technology, power gating, pixel pitch) points in a
-   single batched evaluation, with the Pareto-style winners printed;
-3. a DEVICE-RESIDENT streaming mega-sweep — every Ed-Gaze AND Rhythmic
-   variant stacked into a single PlanBank (coefficients are traced jit
-   inputs, not baked constants) and streamed through one superchunk
-   executable: each dispatch runs many chunks under an in-executable
-   ``lax.scan``, and each chunk decodes its flat indices, evaluates the
-   banked Eqs. 1-17 and folds top-k/min/sum/count in a SINGLE fused
-   Pallas megakernel pass (``kernels/fused_sweep``) — the decoded point
-   matrix and the per-point output table never touch HBM; only O(k)
-   candidates and (V,) scalars leave the kernel, and the k winning rows
-   re-gather their outputs in a tiny second pass.  The same grids
-   densify to ~1e6 points here (set MEGA_SWEEP=1 for >=1e7); the
-   printed dispatch count and HBM-bytes-per-point show what the
-   superchunk scan + megakernel remove vs the staged PR-3 pipeline
-   (kept as the parity oracle via ``engine="staged"``).  Force a
-   multi-device CPU run with
+1. the paper's own tables (Sec. 6) — ``run_study`` rides the monolithic
+   grid engine underneath;
+2. a full design-space sweep with the NEW coefficient-hook axes:
+   ``vdd_scale`` (dynamic energy x vdd^2, static x vdd) and ``adc_bits``
+   (Walden-FoM terms re-price by 2^(bits - lowered)) sweep as PlanBank
+   columns — zero extra executables;
+3. the pluggable algorithm registry: a toy corner-detect pipeline is
+   registered at runtime and swept NEXT TO Ed-Gaze in the same call,
+   through the same single streaming step executable;
+4. a device-resident streaming mega-sweep (superchunk ``lax.scan`` over
+   the fused decode->evaluate->reduce Pallas megakernel): O(k) results
+   at any grid size, one executable, O(1) dispatches.  The default grid
+   here stays CI-smoke-sized (~2e5 points); set MEGA_SWEEP=1 to densify
+   to >=1e7.  Force a multi-device CPU run with
    XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
@@ -33,9 +30,14 @@ Run:  PYTHONPATH=src python examples/explore_design_space.py
 import json
 import os
 
-from repro.core.shard_sweep import stream_cache_info, sweep_stream
-from repro.core.sweep import sweep
+import numpy as np
+
+from repro.core.shard_sweep import stream_cache_info
 from repro.core.usecases import run_study
+from repro.core.usecases.toy import TOY_VARIANTS, build_toy
+from repro.explore import DesignSpace, explore, register_algorithm
+
+TECH_NAMES = {-1: "decl", 0: "sram", 1: "sram_hp", 2: "stt"}
 
 
 def main():
@@ -53,72 +55,86 @@ def main():
         print(f"{r['cis_node']:>5}n {r['variant']:<14} "
               f"{r['total_uj']:>10.1f}")
 
-    # ----- full sweep: the batched engine's reason to exist ---------------
-    grids = {"cis_node": [130, 110, 90, 65, 45, 32, 28],
-             "frame_rate": [15.0, 30.0, 60.0, 120.0],
-             "sys_rows": [4.0, 8.0, 16.0, 32.0],
-             "sys_cols": [8.0, 16.0, 32.0],
-             "mem_tech": ["sram_hp", "stt"],
-             "active_fraction_scale": [0.25, 1.0],
-             "pixel_pitch_um": [3.0, 5.0]}
-    res = sweep("edgaze", grids)
-    feasible = int(res.outputs["feasible"].sum())
-    print(f"\n=== Batched sweep: {len(res)} Ed-Gaze design points in "
-          f"{res.eval_s:.3f}s warm (+{res.compile_s:.2f}s compile, "
-          f"{feasible} feasible) ===")
-    print(f"{'variant':<12} {'node':>5} {'fps':>5} {'sys':>7} {'mem':>7} "
-          f"{'uJ/frame':>9} {'mW/mm^2':>8}")
-    tech_names = {-1: "decl", 0: "sram", 1: "sram_hp", 2: "stt"}
-    for row in res.best("total_j", k=5):
-        sysd = f"{int(row['sys_rows'])}x{int(row['sys_cols'])}"
+    # ----- full sweep incl. the coefficient-hook knobs (vdd, ADC bits) ----
+    space = DesignSpace(["edgaze"], {
+        "cis_node": [130, 110, 90, 65, 45, 32, 28],
+        "frame_rate": [15.0, 30.0, 60.0, 120.0],
+        "sys_rows": [8.0, 16.0, 32.0],
+        "mem_tech": ["sram_hp", "stt"],
+        "active_fraction_scale": [0.25, 1.0],
+        "vdd_scale": [0.8, 1.0],
+        "adc_bits": [-1.0, 8.0]})
+    res = explore(space, k=5)
+    print(f"\n=== explore(): {res.n_points} Ed-Gaze points "
+          f"({res.engine} engine) in {res.eval_s:.3f}s warm "
+          f"(+{res.compile_s:.2f}s compile, {res.n_feasible} feasible) ===")
+    print(f"{'variant':<12} {'node':>5} {'fps':>5} {'mem':>7} {'vdd':>5} "
+          f"{'adc':>5} {'uJ/frame':>9} {'mW/mm^2':>8}")
+    for row in res.best():
+        adc = "decl" if row["adc_bits"] < 0 else f"{row['adc_bits']:.0f}b"
         print(f"{row['variant']:<12} {int(row['cis_node']):>4}n "
-              f"{row['frame_rate']:>5.0f} {sysd:>7} "
-              f"{tech_names[int(row['mem_tech'])]:>7} "
+              f"{row['frame_rate']:>5.0f} "
+              f"{TECH_NAMES[int(row['mem_tech'])]:>7} "
+              f"{row['vdd_scale']:>5.2f} {adc:>5} "
               f"{row['total_j']*1e6:>9.2f} {row['density_mw_mm2']:>8.3f}")
+    # the flat-index codec reproduces any scored point declaratively
+    flat = space.encode(**{k: v for k, v in res.best(1)[0].items()
+                           if k in ("algorithm", "variant")
+                           or k in space.resolved_grid(0).names})
+    print(f"best point = flat stream index {flat}; "
+          f"decode round-trips: {space.decode(flat)['variant']}")
 
-    # cheapest design that still holds 120 FPS
-    import numpy as np
-    mask = (res.params["frame_rate"] == 120.0) & \
-        res.outputs["feasible"].astype(bool)
-    if mask.any():
-        i = int(np.argmin(np.where(mask, res.outputs["total_j"], np.inf)))
-        row = res.row(i)
-        print(f"\nbest @120FPS: {row['variant']} {int(row['cis_node'])}nm "
-              f"{int(row['sys_rows'])}x{int(row['sys_cols'])} "
-              f"{tech_names[int(row['mem_tech'])]} -> "
-              f"{row['total_j']*1e6:.2f} uJ/frame")
+    # ----- pluggable registry: a NEW pipeline is one register call -------
+    register_algorithm("toy", build_toy, TOY_VARIANTS)
+    duo = explore(DesignSpace(["edgaze", "toy"],
+                              {"cis_node": [130.0, 65.0, 28.0],
+                               "frame_rate": [15.0, 30.0, 60.0],
+                               "adc_bits": [-1.0, 6.0, 10.0]}),
+                  engine="fused", chunk_size=32, k=4)
+    print(f"\n=== Registry demo: Ed-Gaze + registered 'toy' pipeline in "
+          f"ONE call ({duo.n_variants} variants, "
+          f"{stream_cache_info()['step_compiles']} step executable) ===")
+    for algo, rec in sorted(duo.best_by_algorithm().items()):
+        s = rec["summary"]
+        print(f"{algo:<9} best {rec['variant']:<8} "
+              f"{s['metric_min']*1e6:>8.2f} uJ/frame "
+              f"({rec['n_feasible']} feasible)")
 
     # ----- one-executable streaming mega-sweep: bounded memory at any N ---
-    import numpy as np
     mega = bool(int(os.environ.get("MEGA_SWEEP", "0")))
-    mega_grids = {
-        "cis_node": list(np.linspace(28, 130, 18 if mega else 9)),
+    mega_space = DesignSpace(["edgaze", "rhythmic"], {
+        "cis_node": list(np.linspace(28, 130, 18 if mega else 6)),
         "soc_node": [14.0, 22.0, 28.0] if mega else [22.0],
-        "frame_rate": list(np.linspace(15, 120, 8)),
-        "sys_rows": [4.0, 8.0, 16.0, 32.0, 64.0, 128.0],
-        "sys_cols": [4.0, 8.0, 16.0, 32.0, 64.0],
+        "frame_rate": list(np.linspace(15, 120, 8 if mega else 4)),
+        "sys_rows": [4.0, 8.0, 16.0, 32.0, 64.0, 128.0]
+        if mega else [8.0, 32.0],
+        "sys_cols": [4.0, 8.0, 16.0, 32.0, 64.0] if mega else [8.0, 32.0],
         "mem_tech": ["sram", "sram_hp", "stt"],
-        "active_fraction_scale": list(np.linspace(0.1, 1.0, 5)),
-        "pixel_pitch_um": list(np.linspace(2.0, 6.0, 7 if mega else 4))}
+        "active_fraction_scale": list(np.linspace(0.1, 1.0, 5))
+        if mega else [0.25, 1.0],
+        "pixel_pitch_um": list(np.linspace(2.0, 6.0, 7 if mega else 3)),
+        "vdd_scale": [0.8, 0.9, 1.0, 1.1] if mega else [0.9, 1.0]})
     # ONE call, ONE executable, O(1) dispatches: all 8 Ed-Gaze + Rhythmic
     # variants ride a shared PlanBank; each dispatch scans `superchunk`
     # chunks inside the executable and each chunk runs the fused
     # decode->evaluate->reduce megakernel
-    s = sweep_stream(["edgaze", "rhythmic"], mega_grids,
-                     chunk_size=1 << 17, k=6)
+    s = explore(mega_space, engine="fused",
+                chunk_size=1 << 17 if mega else 1 << 14, k=6)
     print(f"\n=== Streaming mega-sweep: {s.n_points:,} points x "
           f"{s.n_variants} variants over {s.n_devices} device(s) ===")
     print(f"compile {s.compile_s:.1f}s ONCE "
-          f"({stream_cache_info()['step_compiles']} executable) vs "
+          f"({s.cache['stream']['step_compiles']} executables cached) vs "
           f"eval {s.eval_s:.1f}s warm -> {s.points_per_sec:,.0f} points/s")
-    # dispatch + HBM audit: the PR-3 staged pipeline dispatched once per
-    # chunk and round-tripped the decoded (n_axes, B) point matrix, the
-    # variant ids and the B x n_out output table through HBM; the fused
-    # megakernel only ever writes its O(k) block partials
+    # dispatch + HBM audit: the staged pipeline dispatches once per chunk
+    # and round-trips the decoded (n_axes, B) point matrix, the variant
+    # ids and the B x n_out output table through HBM; the fused megakernel
+    # only ever writes its O(k) block partials
+    from repro.core.axes import AXES
     from repro.core.batch import OUT_KEYS
-    from repro.core.sweep import AXES
     n_axes, n_out = len(AXES), len(OUT_KEYS)
-    chunks = -(-s.n_points // s.chunk_size)
+    # staged chunks align to variant boundaries: ceil(n_var/chunk) each
+    n_var = s.n_points // s.n_variants
+    chunks = s.n_variants * -(-n_var // s.chunk_size)
     staged_bpp = 4 * (n_axes + 1 + n_out)
     fused_bpp = 4 * (2 * s.k + 4) * s.n_devices / s.chunk_size
     print(f"dispatches/sweep: {chunks} staged -> {s.dispatches} fused "
@@ -132,7 +148,8 @@ def main():
             continue
         print(f"{algo:<9} best {rec['variant']:<12} "
               f"{int(p['cis_node']):>4}n {p['frame_rate']:>5.0f}fps "
-              f"{int(p['sys_rows'])}x{int(p['sys_cols'])} -> "
+              f"{int(p['sys_rows'])}x{int(p['sys_cols'])} "
+              f"vdd={p['vdd_scale']:.2f} -> "
               f"{rec['summary']['metric_min']*1e6:.2f} uJ/frame "
               f"({rec['n_feasible']:,} feasible)")
 

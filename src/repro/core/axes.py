@@ -1,0 +1,206 @@
+"""Declarative sweep-axis registry: the single source of truth for axes.
+
+Before ISSUE 5 the sweep axes lived as a frozen tuple in ``core/sweep.py``
+plus hand-maintained mirrors — ``DesignPoints`` fields, ``point_defaults``
+entries, the mem-tech coding in ``_tech_code`` and the explicit
+``DesignPoints(...)`` construction inside the streaming shard body — so
+adding a knob meant editing four core files in lock-step.  This module
+collapses all of that into one ordered table of :class:`Axis` specs.
+Everything else derives from it:
+
+* :data:`AXES` — the canonical numeric-axis order (``DesignPoints``
+  fields, ``ChunkedGrid`` axis order, the on-device decode layout);
+* per-axis defaults (``repro.core.batch.point_defaults``), dtypes and
+  value encoding (``mem_tech`` names -> codes);
+* the **coefficient hooks** that tie a swept value into the banked
+  Eq. 1-17 physics.  ``Axis.coeff_hook`` maps a fixed term GROUP of the
+  arithmetic — ``"dynamic"`` (C V^2-shaped terms), ``"static"``
+  (bias-current / leakage terms), ``"fom"`` (Walden conversion terms) —
+  to a traceable multiplier function; per-variant reference data rides
+  the :class:`~repro.core.plan_bank.PlanBank` as coefficient columns
+  (``Axis.coeff_cols``).  The three parity-locked evaluators in
+  ``repro.core.batch`` read both fields FROM this registry (never the
+  functions directly), so an axis's physics is defined in one place.
+  Because bank coefficients and axis values are both traced jit inputs,
+  a new hooked axis changes ZERO executables: the ``vdd_scale`` /
+  ``adc_bits`` knobs added here sweep through the same single step
+  executable as any other axis (asserted in tests/test_explore.py) —
+  and batches that sit at the hook defaults compile a hook-free graph
+  (the per-plan evaluator specializes on a static flag), so sweeps that
+  never touch these knobs pay nothing.
+
+The two analog knobs (first entries of the ROADMAP "more lowering
+constants -> swept coefficients" item, after Datta et al.'s P2M and
+Song et al.'s conv-in-pixel directions in PAPERS.md):
+
+* ``vdd_scale`` — supply-voltage scale relative to each cell's declared
+  rails.  First-order CMOS model: dynamic (``C V^2``-shaped) energies —
+  analog constant terms, Walden-FoM conversion terms, digital dynamic
+  energy, memory access energy — scale with ``vdd_scale ** 2``; static /
+  bias-current terms (analog linear-in-delay terms, digital static
+  power, memory leakage) scale linearly with ``vdd_scale`` (``P = V *
+  I_bias``).  Communication rails (MIPI / uTSV) are independent I/O
+  supplies and do not track the knob.
+* ``adc_bits`` — ADC resolution override.  Walden's survey model prices
+  a conversion at ``FoM * 2**bits``, so a converter lowered at ``ref``
+  bits re-prices to ``2 ** (adc_bits - ref)`` of its lowered energy.
+  Only true converters follow the knob: comparator cells (lowered at
+  ``resolution_bits == 1``) and the sentinel ``adc_bits < 0``
+  ("declared") keep the lowered energy.  The per-term reference
+  resolutions ride the bank as the ``fom_bits`` coefficient column.
+
+The scalar ``estimate_energy`` oracle walks the *declared* structure and
+does not model either knob; at the default values (``vdd_scale=1``,
+``adc_bits=-1``) both hooks are exact no-ops, so scalar parity is
+untouched, and for non-default values the three batched evaluators are
+the parity oracle for each other (fused == staged == per-plan at rel
+1e-6, tests/test_explore.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .plan import TECH_INDEX
+
+#: ``mem_tech`` sentinel: keep each memory's declared technology
+TECH_DECLARED = -1
+
+#: ``adc_bits`` sentinel: keep each converter's lowered resolution
+ADC_DECLARED = -1.0
+
+
+# ---------------------------------------------------------------------------
+# Coefficient hooks (traceable; shared by all three evaluators)
+# ---------------------------------------------------------------------------
+def vdd_dynamic_scale(vdd):
+    """Multiplier on dynamic (``C V^2``) energy terms."""
+    return vdd * vdd
+
+
+def vdd_static_scale(vdd):
+    """Multiplier on static / bias-current (``V * I``) energy terms."""
+    return vdd
+
+
+def adc_fom_mod(adc_bits, ref_bits):
+    """Multiplier on a Walden-FoM term lowered at ``ref_bits`` resolution.
+
+    ``2 ** (adc_bits - ref_bits)`` for converters; comparators
+    (``ref_bits <= 1``) and the ``adc_bits < 0`` sentinel stay at 1.
+    Broadcasting is the caller's job: pass ``(F,)`` against a scalar for
+    the vmap evaluators or ``(F, 1)`` against ``(1, B)`` for the
+    coefficient-form block compute.
+    """
+    mod = jnp.exp2(adc_bits - ref_bits)
+    return jnp.where((adc_bits < 0) | (ref_bits <= 1.0),
+                     jnp.ones_like(mod), mod)
+
+
+def _tech_code(v) -> int:
+    """Map a memory-technology name (or code) to its numeric axis code."""
+    if v is None or v == "declared" or v == TECH_DECLARED:
+        return TECH_DECLARED
+    if isinstance(v, str):
+        if v not in TECH_INDEX:
+            raise KeyError(f"unknown memory technology {v!r}; valid: "
+                           f"{sorted(TECH_INDEX)} or 'declared'")
+        return TECH_INDEX[v]
+    return int(v)
+
+
+# ---------------------------------------------------------------------------
+# Axis specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """Declarative spec of one sweep axis.
+
+    ``kind`` is ``"structural"`` (selects a lowered plan — the
+    ``variant`` axis), ``"numeric"`` (a traced per-point value) or
+    ``"tech"`` (a coded categorical riding the numeric machinery).
+    ``default`` is either a literal or the name of the
+    :class:`~repro.core.plan.EnergyPlan` attribute holding the value the
+    structure was built with.  ``encode`` maps user-facing values to the
+    numeric code swept on device.  ``coeff_hook`` (with its per-variant
+    ``coeff_cols`` PlanBank columns) ties the value into the banked
+    physics — see the module docstring.
+    """
+    name: str
+    kind: str                                  # structural | numeric | tech
+    doc: str
+    default: object = None                     # literal or plan attr name
+    integer: bool = False                      # rides int32 on device
+    encode: Optional[Callable] = None          # value -> numeric code
+    coeff_cols: Tuple[str, ...] = ()           # PlanBank columns the hooks read
+    #: term-group -> traceable multiplier fn.  The groups are the fixed
+    #: extension points of the Eq. 1-17 arithmetic — "dynamic" (C V^2
+    #: terms), "static" (bias/leakage terms), "fom" (Walden conversion
+    #: terms) — and the evaluators in ``repro.core.batch`` READ the hook
+    #: (and its ``coeff_cols``) from this registry entry, so changing an
+    #: axis's physics is an edit here, not in the three evaluators.
+    coeff_hook: Optional[Dict[str, Callable]] = None
+
+
+VARIANT_AXIS = Axis(
+    "variant", "structural",
+    "structural variant name; selects which lowered EnergyPlan scores "
+    "the point (each variant is one PlanBank row)")
+
+#: ordered numeric/tech axes — defines DesignPoints fields, ChunkedGrid
+#: axis order and the on-device decode layout
+AXES_SPEC: Tuple[Axis, ...] = (
+    Axis("cis_node", "numeric",
+         "sensor-layer process node [nm] (DeepScaleTool dynamic-energy + "
+         "leakage scaling)", default="default_cis_node"),
+    Axis("soc_node", "numeric",
+         "host/compute-layer process node [nm]",
+         default="default_soc_node"),
+    Axis("mem_tech", "tech",
+         "memory technology for ALL memories: 'sram', 'sram_hp', 'stt' "
+         "or 'declared' (-1) to keep each memory's own",
+         default=TECH_DECLARED, integer=True, encode=_tech_code),
+    Axis("sys_rows", "numeric", "systolic array rows",
+         default="default_sys_rows"),
+    Axis("sys_cols", "numeric", "systolic array cols",
+         default="default_sys_cols"),
+    Axis("frame_rate", "numeric", "frame rate [FPS]",
+         default="default_frame_rate"),
+    Axis("active_fraction_scale", "numeric",
+         "multiplier on each memory's power-gating active fraction "
+         "(Eq. 16 leakage)", default=1.0),
+    Axis("pixel_pitch_um", "numeric",
+         "pixel pitch [um] (Sec. 6.2 analog area / power density)",
+         default="default_pixel_pitch"),
+    Axis("vdd_scale", "numeric",
+         "supply-voltage scale vs the declared rails: dynamic energies "
+         "x vdd^2, static/bias/leakage x vdd; MIPI/uTSV I/O rails are "
+         "independent", default=1.0,
+         coeff_hook={"dynamic": vdd_dynamic_scale,
+                     "static": vdd_static_scale}),
+    Axis("adc_bits", "numeric",
+         "ADC resolution override [bits]: Walden-FoM conversion terms "
+         "re-price by 2^(adc_bits - lowered bits); < 0 keeps the "
+         "declared resolution", default=ADC_DECLARED,
+         coeff_cols=("fom_bits",), coeff_hook={"fom": adc_fom_mod}),
+)
+
+#: canonical numeric-axis name order (== DesignPoints._fields)
+AXES: Tuple[str, ...] = tuple(a.name for a in AXES_SPEC)
+
+AXIS_BY_NAME = {a.name: a for a in (VARIANT_AXIS,) + AXES_SPEC}
+
+
+def axis_default(axis: Axis, plan) -> float:
+    """The axis value the plan's structure was built with."""
+    if isinstance(axis.default, str):
+        return float(getattr(plan, axis.default))
+    return axis.default
+
+
+def encode_axis_value(name: str, v):
+    """Encode one user-facing axis value to its numeric sweep code."""
+    axis = AXIS_BY_NAME[name]
+    return axis.encode(v) if axis.encode is not None else v

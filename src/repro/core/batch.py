@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.category_reduce import category_reduce
+from .axes import (ADC_DECLARED, AXES, AXES_SPEC, AXIS_BY_NAME,
+                   TECH_DECLARED, axis_default)
 from .constants import (MIPI_CSI2_ENERGY_PER_BYTE, DYNAMIC_ENERGY_SCALE,
                         SRAM_ACCESS_ENERGY_PER_BIT_65, SRAM_HP_LEAKAGE_PER_BIT,
                         SRAM_LEAKAGE_PER_BIT, STT_LEAKAGE_PER_BIT,
@@ -42,11 +44,13 @@ from .constants import (MIPI_CSI2_ENERGY_PER_BYTE, DYNAMIC_ENERGY_SCALE,
 from .fom import fom_table_points
 from .plan import CATEGORIES, EnergyPlan, _EXTRA_CACHES
 
-TECH_DECLARED = -1  # mem_tech value meaning "keep each memory's technology"
-
 
 class DesignPoints(NamedTuple):
-    """Struct-of-arrays batch of design points (all fields shape (B,))."""
+    """Struct-of-arrays batch of design points (all fields shape (B,)).
+
+    Field order is the axis-registry order (``repro.core.axes.AXES``) —
+    the on-device grid decoder emits axis rows positionally against it.
+    """
     cis_node: jnp.ndarray            # nm, sensor-layer process node
     soc_node: jnp.ndarray            # nm, host/compute-layer process node
     mem_tech: jnp.ndarray            # int: -1 declared, 0 sram, 1 hp, 2 stt
@@ -55,24 +59,61 @@ class DesignPoints(NamedTuple):
     frame_rate: jnp.ndarray          # FPS
     active_fraction_scale: jnp.ndarray   # multiplies each memory's alpha
     pixel_pitch_um: jnp.ndarray      # analog area knob (power density)
+    vdd_scale: jnp.ndarray           # supply scale: dyn x v^2, static x v
+    adc_bits: jnp.ndarray            # ADC resolution override (-1 declared)
 
     @property
     def batch(self) -> int:
         return int(self.cis_node.shape[0])
 
 
+# the axis registry and the point struct can never drift apart
+assert DesignPoints._fields == AXES, (DesignPoints._fields, AXES)
+
+#: coefficient hooks + their PlanBank reference columns, read FROM the
+#: axis registry (repro.core.axes) — the Axis entry is the single
+#: definition site of each knob's physics; the evaluators below only
+#: apply them at the fixed term-group sites (dynamic / static / fom)
+_VDD_HOOKS = AXIS_BY_NAME["vdd_scale"].coeff_hook
+_ADC_HOOK = AXIS_BY_NAME["adc_bits"].coeff_hook["fom"]
+_ADC_REF_COL = AXIS_BY_NAME["adc_bits"].coeff_cols[0]      # "fom_bits"
+
+
+def _hooks_active(points: "DesignPoints") -> bool:
+    """Whether a batch leaves the coefficient-hook defaults.
+
+    Decided BEFORE dispatch so the per-plan evaluator can specialize: a
+    default-valued batch (``vdd_scale == 1``, ``adc_bits < 0``) compiles
+    the exact pre-hook graph and pays zero arithmetic for the knobs.
+    Reads the point arrays back to host — sweep drivers that know their
+    grids should decide ONCE via :func:`grid_hooks_active` and thread
+    the flag down instead of paying this per chunk.
+    """
+    return bool(np.any(np.asarray(points.vdd_scale) != 1.0)
+                or np.any(np.asarray(points.adc_bits) >= 0))
+
+
+def grid_hooks_active(grids: Dict[str, Sequence]) -> bool:
+    """Sweep-level hook decision from a (host) grids dict.
+
+    True iff any coefficient-hook axis leaves its default anywhere in
+    the grid; unswept hook axes fill their literal registry defaults
+    (``vdd_scale = 1``, ``adc_bits = -1``), so absence means inactive.
+    """
+    v = np.asarray(grids.get("vdd_scale", 1.0), np.float64)
+    a = np.asarray(grids.get("adc_bits", ADC_DECLARED), np.float64)
+    return bool(np.any(v != 1.0) or np.any(a >= 0.0))
+
+
 def point_defaults(plan: EnergyPlan) -> Dict[str, float]:
     """Per-axis default values: what the structure was built with.
 
-    Single source of truth for the sweep axes — ``make_points`` and
-    ``sweep()`` both fill unswept axes from here, so a sweep over a subset
-    of axes stays parity-exact with the scalar oracle on the others.
+    Derived from the axis registry (``repro.core.axes.AXES_SPEC``) —
+    ``make_points`` and the sweep front doors all fill unswept axes from
+    here, so a sweep over a subset of axes stays parity-exact with the
+    scalar oracle on the others.
     """
-    return dict(
-        cis_node=plan.default_cis_node, soc_node=plan.default_soc_node,
-        mem_tech=TECH_DECLARED, sys_rows=plan.default_sys_rows,
-        sys_cols=plan.default_sys_cols, frame_rate=plan.default_frame_rate,
-        active_fraction_scale=1.0, pixel_pitch_um=plan.default_pixel_pitch)
+    return {a.name: axis_default(a, plan) for a in AXES_SPEC}
 
 
 def make_points(plan: EnergyPlan, n: Optional[int] = None,
@@ -89,9 +130,21 @@ def make_points(plan: EnergyPlan, n: Optional[int] = None,
     for name, dflt in defaults.items():
         v = np.asarray(axes.get(name, dflt), np.float64)
         v = np.broadcast_to(np.atleast_1d(v), (n,))
-        dt = jnp.int32 if name == "mem_tech" else jnp.float32
+        dt = jnp.int32 if AXIS_BY_NAME[name].integer else jnp.float32
         out[name] = jnp.asarray(v.astype(np.float64), dt)
     return DesignPoints(**out)
+
+
+def points_from_axis_rows(vals: Sequence) -> DesignPoints:
+    """``DesignPoints`` from decoded per-axis value rows in AXES order.
+
+    The streaming shard bodies feed the on-device decoder's ``(n_axes,
+    B)`` output here; integer-coded axes (``mem_tech``) are cast per the
+    axis registry, so new axes never need hand-edited construction sites.
+    """
+    assert len(vals) == len(AXES_SPEC), (len(vals), AXES)
+    return DesignPoints(*(v.astype(jnp.int32) if spec.integer else v
+                          for spec, v in zip(AXES_SPEC, vals)))
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +181,7 @@ def _build_eval(plan: EnergyPlan):
                                        plan.a_ops))
     lin_coeff, lin_inv = f32(plan.lin_coeff), f32(plan.lin_inv_div)
     fom_scale, fom_inv = f32(plan.fom_scale), f32(plan.fom_inv_div)
+    fom_bits = f32(plan.fom_bits)
     lin_arr = jnp.asarray(plan.lin_arr, jnp.int32)
     fom_arr = jnp.asarray(plan.fom_arr, jnp.int32)
 
@@ -145,8 +199,19 @@ def _build_eval(plan: EnergyPlan):
     def node_for(role, declared, cis, soc):
         return jnp.where(role == 0, cis, jnp.where(role == 1, soc, declared))
 
-    def eval_one(pt: DesignPoints):
+    def eval_one(pt: DesignPoints, hooks: bool):
         frame_time = 1.0 / pt.frame_rate
+        # axis-registry coefficient hooks; `hooks` is STATIC — default-
+        # valued batches (see _hooks_active) compile the hook-free graph
+        if hooks:
+            dyn_v = _VDD_HOOKS["dynamic"](pt.vdd_scale)
+            stat_v = _VDD_HOOKS["static"](pt.vdd_scale)
+
+        def hdyn(x):
+            return x * dyn_v if hooks else x
+
+        def hstat(x):
+            return x * stat_v if hooks else x
 
         # ----- Sec. 4.1: digital timing, unrolled over the (tiny) DAG -----
         durs = []
@@ -180,16 +245,18 @@ def _build_eval(plan: EnergyPlan):
         # ----- analog rows (Eqs. 2-13) ------------------------------------
         if A:
             pad = t_a * a_padc                       # per-access delay
-            e_access = a_const
+            e_access = hdyn(a_const)
             if len(plan.lin_arr):
                 t_cell = jnp.maximum(pad[lin_arr] * lin_inv, 1e-12)
                 e_access = e_access + jnp.zeros(A, jnp.float32).at[
-                    lin_arr].add(lin_coeff * t_cell)
+                    lin_arr].add(hstat(lin_coeff * t_cell))
             if len(plan.fom_arr):
                 t_cell = jnp.maximum(pad[fom_arr] * fom_inv, 1e-12)
                 fom = _walden_fom(1.0 / t_cell)
+                if hooks:
+                    fom = fom * _ADC_HOOK(pt.adc_bits, fom_bits)
                 e_access = e_access + jnp.zeros(A, jnp.float32).at[
-                    fom_arr].add(fom_scale * fom)
+                    fom_arr].add(hdyn(fom_scale * fom))
             rows.append(e_access * a_ops)
 
         # ----- digital compute rows (Eqs. 14-15) --------------------------
@@ -199,7 +266,9 @@ def _build_eval(plan: EnergyPlan):
             dyn = f32(plan.d_dyn_coeff) * s_u
             # systolic dynamic energy is per-MAC (dims don't change it);
             # static power integrates over the (dims-dependent) runtime
-            rows.append(dyn + f32(plan.d_static_power) * jnp.stack(durs))
+            rows.append(hdyn(dyn)
+                        + hstat(f32(plan.d_static_power)
+                                * jnp.stack(durs)))
 
         # ----- memory rows (Eq. 16) ---------------------------------------
         if M:
@@ -233,8 +302,8 @@ def _build_eval(plan: EnergyPlan):
             reads = (f32(plan.m_reads_fixed)
                      + f32(plan.m_reads_dnn2) / jnp.maximum(pt.sys_rows, 1.0))
             alpha = f32(plan.m_alpha) * pt.active_fraction_scale
-            rows.append(read_e * reads + write_e * f32(plan.m_writes)
-                        + leak * frame_time * alpha)
+            rows.append(hdyn(read_e * reads + write_e * f32(plan.m_writes))
+                        + hstat(leak * frame_time * alpha))
 
         # ----- communication rows (Eq. 17) --------------------------------
         comm = []
@@ -268,8 +337,9 @@ def _build_eval(plan: EnergyPlan):
     # [C category columns | total | on-sensor total] in one Pallas reduce
     weights = jnp.concatenate([onehot, ones, on_mask], axis=1)
 
-    def eval_batch(points: DesignPoints, keep_unit_energies: bool = False):
-        per = jax.vmap(eval_one)(points)
+    def eval_batch(points: DesignPoints, keep_unit_energies: bool = False,
+                   hooks: bool = False):
+        per = jax.vmap(lambda pt: eval_one(pt, hooks))(points)
         red = category_reduce(per["unit_e"], weights)
         n_c = len(CATEGORIES)
         out = {f"cat_{c}_j": red[:, i] for i, c in enumerate(CATEGORIES)}
@@ -289,7 +359,8 @@ def _build_eval(plan: EnergyPlan):
             out["unit_e"] = per["unit_e"]
         return out
 
-    return jax.jit(eval_batch, static_argnames=("keep_unit_energies",))
+    return jax.jit(eval_batch,
+                   static_argnames=("keep_unit_energies", "hooks"))
 
 
 # ---------------------------------------------------------------------------
@@ -354,6 +425,11 @@ def build_banked_eval(dims):
     def eval_one(row, pt: DesignPoints):
         g = row_getter(row, layout)
         frame_time = 1.0 / pt.frame_rate
+        # axis-registry coefficient hooks: the per-variant reference data
+        # (fom_bits) rides the bank row, so these axes are traced inputs
+        # end to end — zero new executables per swept value
+        dyn_v = _VDD_HOOKS["dynamic"](pt.vdd_scale)
+        stat_v = _VDD_HOOKS["static"](pt.vdd_scale)
 
         # ----- Sec. 4.1 digital timing, data-driven over padded slots -----
         if D:
@@ -385,18 +461,19 @@ def build_banked_eval(dims):
         # ----- analog rows (Eqs. 2-13) ------------------------------------
         if A:
             pad = t_a * g("a_pad_coeff")
-            e_access = g("a_const")
+            e_access = g("a_const") * dyn_v
             if L:
                 la = g("lin_arr").astype(jnp.int32)
                 t_cell = jnp.maximum(pad[la] * g("lin_inv"), 1e-12)
                 e_access = e_access + jnp.zeros((A,), jnp.float32).at[
-                    la].add(g("lin_coeff") * t_cell)
+                    la].add(g("lin_coeff") * t_cell * stat_v)
             if F:
                 fa = g("fom_arr").astype(jnp.int32)
                 t_cell = jnp.maximum(pad[fa] * g("fom_inv"), 1e-12)
                 fom = _walden_fom(1.0 / t_cell)
+                fom = fom * _ADC_HOOK(pt.adc_bits, g(_ADC_REF_COL))
                 e_access = e_access + jnp.zeros((A,), jnp.float32).at[
-                    fa].add(g("fom_scale") * fom)
+                    fa].add(g("fom_scale") * fom * dyn_v)
             rows.append(e_access * g("a_ops"))
 
         # ----- digital compute rows (Eqs. 14-15) --------------------------
@@ -404,7 +481,8 @@ def build_banked_eval(dims):
             node_u = node_for(g("d_role"), g("d_node"),
                               pt.cis_node, pt.soc_node)
             s_u = _interp_table(node_u, dyn_nodes, dyn_logv)
-            rows.append(g("d_dyn") * s_u + g("d_static") * durs)
+            rows.append(g("d_dyn") * s_u * dyn_v
+                        + g("d_static") * durs * stat_v)
 
         # ----- memory rows (Eq. 16) ---------------------------------------
         if M:
@@ -438,8 +516,8 @@ def build_banked_eval(dims):
             reads = (g("m_reads_fixed")
                      + g("m_reads_dnn2") / jnp.maximum(pt.sys_rows, 1.0))
             alpha = g("m_alpha") * pt.active_fraction_scale
-            rows.append(read_e * reads + write_e * g("m_writes")
-                        + leak * frame_time * alpha)
+            rows.append((read_e * reads + write_e * g("m_writes")) * dyn_v
+                        + leak * frame_time * alpha * stat_v)
 
         # ----- communication rows (Eq. 17, fixed utsv+mipi slots) ---------
         rows.append(jnp.stack([
@@ -602,6 +680,10 @@ def build_coeff_compute(dims, *, exact: bool = True):
                              jnp.where(r == 1, soc, declared[:, None]))
 
         frame_time = 1.0 / pt["frame_rate"]
+        # axis-registry coefficient hooks, (1, B)-oriented for the block
+        # layout; same arithmetic order as the vmap evaluators
+        dyn_v = _VDD_HOOKS["dynamic"](pt["vdd_scale"])[None, :]
+        stat_v = _VDD_HOOKS["static"](pt["vdd_scale"])[None, :]
 
         # ----- Sec. 4.1 digital timing over padded slots ------------------
         if D:
@@ -639,30 +721,34 @@ def build_coeff_compute(dims, *, exact: bool = True):
         # ----- analog rows (Eqs. 2-13) ------------------------------------
         if A:
             pad = t_a[None, :] * g("a_pad_coeff")[:, None]   # (A, B)
-            e_access = jnp.broadcast_to(g("a_const")[:, None], (A, b))
+            e_access = jnp.broadcast_to(g("a_const")[:, None],
+                                        (A, b)) * dyn_v
             if L:
                 la = g("lin_arr").astype(jnp.int32)
                 t_cell = jnp.maximum(
                     _take_rows(pad, la, A, exact) * g("lin_inv")[:, None],
                     1e-12)
                 e_access = e_access + _scatter_add_rows(
-                    g("lin_coeff")[:, None] * t_cell, la, A, exact)
+                    g("lin_coeff")[:, None] * t_cell * stat_v, la, A,
+                    exact)
             if F:
                 fa = g("fom_arr").astype(jnp.int32)
                 t_cell = jnp.maximum(
                     _take_rows(pad, fa, A, exact) * g("fom_inv")[:, None],
                     1e-12)
                 fom = walden(1.0 / t_cell)
+                fom = fom * _ADC_HOOK(pt["adc_bits"][None, :],
+                                      g(_ADC_REF_COL)[:, None])
                 e_access = e_access + _scatter_add_rows(
-                    g("fom_scale")[:, None] * fom, fa, A, exact)
+                    g("fom_scale")[:, None] * fom * dyn_v, fa, A, exact)
             rows.append(e_access * g("a_ops")[:, None])
 
         # ----- digital compute rows (Eqs. 14-15) --------------------------
         if D:
             node_u = node_for(g("d_role"), g("d_node"))
             s_u = dyn_scale(node_u)
-            rows.append(g("d_dyn")[:, None] * s_u
-                        + g("d_static")[:, None] * durs)
+            rows.append(g("d_dyn")[:, None] * s_u * dyn_v
+                        + g("d_static")[:, None] * durs * stat_v)
 
         # ----- memory rows (Eq. 16) ---------------------------------------
         if M:
@@ -697,8 +783,9 @@ def build_coeff_compute(dims, *, exact: bool = True):
                      / jnp.maximum(pt["sys_rows"], 1.0)[None, :])
             alpha = (g("m_alpha")[:, None]
                      * pt["active_fraction_scale"][None, :])
-            rows.append(read_e * reads + write_e * g("m_writes")[:, None]
-                        + leak * frame_time[None, :] * alpha)
+            rows.append((read_e * reads
+                         + write_e * g("m_writes")[:, None]) * dyn_v
+                        + leak * frame_time[None, :] * alpha * stat_v)
 
         # ----- communication rows (Eq. 17) --------------------------------
         rows.append(jnp.stack([
@@ -768,18 +855,24 @@ def eval_fn(plan: EnergyPlan):
     return plan._eval_fn
 
 
-def _compiled(plan: EnergyPlan, points: DesignPoints, keep: bool):
-    """AOT-compiled executable for this (batch size, flag), with compile
+def _compiled(plan: EnergyPlan, points: DesignPoints, keep: bool,
+              hooks: Optional[bool] = None):
+    """AOT-compiled executable for this (batch size, flags), with compile
     time measured separately from evaluation (satellite of ISSUE 2: the
-    old path folded jit compilation into the sweep wall time)."""
+    old path folded jit compilation into the sweep wall time).  The
+    coefficient-hook flag is part of the key: default-valued batches run
+    the hook-free executable.  ``hooks=None`` derives the flag from the
+    point values (host readback); sweep drivers pass it explicitly."""
     if plan._exec_cache is None:
         plan._exec_cache = {}
-    key = (points.batch, keep)
+    hooks = _hooks_active(points) if hooks is None else bool(hooks)
+    key = (points.batch, keep, hooks)
     hit = plan._exec_cache.get(key)
     if hit is not None:
         return hit, 0.0
     t0 = time.perf_counter()
-    exe = eval_fn(plan).lower(points, keep_unit_energies=keep).compile()
+    exe = eval_fn(plan).lower(points, keep_unit_energies=keep,
+                              hooks=hooks).compile()
     compile_s = time.perf_counter() - t0
     plan._exec_cache[key] = exe
     return exe, compile_s
@@ -787,7 +880,8 @@ def _compiled(plan: EnergyPlan, points: DesignPoints, keep: bool):
 
 def evaluate_batch(plan: EnergyPlan, points: DesignPoints,
                    keep_unit_energies: bool = False,
-                   timings: Optional[Dict[str, float]] = None
+                   timings: Optional[Dict[str, float]] = None,
+                   hooks: Optional[bool] = None
                    ) -> Dict[str, np.ndarray]:
     """Score a whole batch of design points in one device call.
 
@@ -800,7 +894,8 @@ def evaluate_batch(plan: EnergyPlan, points: DesignPoints,
     lowering + XLA compilation, only on the first call per batch size)
     and ``eval_s`` (the actual device execution + host transfer).
     """
-    exe, compile_s = _compiled(plan, points, bool(keep_unit_energies))
+    exe, compile_s = _compiled(plan, points, bool(keep_unit_energies),
+                               hooks)
     t0 = time.perf_counter()
     out = exe(points)
     out = {k: np.asarray(v) for k, v in out.items()}

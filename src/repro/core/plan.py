@@ -23,6 +23,9 @@ What stays symbolic (the swept axes) and what is folded:
   leakage models per memory (user-supplied energies stay fixed).
 * ``active_fraction_scale`` -> multiplies each memory's alpha (Eq. 16).
 * ``pixel_pitch_um``   -> analog area for the Sec. 6.2 power density.
+* ``vdd_scale``        -> dynamic energies x vdd^2, static/leakage x vdd.
+* ``adc_bits``         -> re-prices Walden-FoM terms vs their lowered
+  resolution (``fom_bits``); see ``repro.core.axes``.
 
 Everything else — access counts (Eq. 3/13), stencil geometry, DAG edges,
 MIPI/uTSV bytes — is a constant of the structure and is folded here.
@@ -91,6 +94,8 @@ class EnergyPlan:
     fom_arr: np.ndarray                 # (F,) analog index
     fom_scale: np.ndarray               # (F,) 2^bits * accesses_per_output
     fom_inv_div: np.ndarray             # (F,)
+    fom_bits: np.ndarray                # (F,) lowered resolution (adc_bits
+                                        #      axis re-prices vs this ref)
 
     # ---- digital stage section (D entries, topo order) -------------------
     d_is_sys: np.ndarray                # (D,) bool
@@ -206,7 +211,8 @@ def _lower_component(comp, sink_const, sink_lin, sink_fom) -> None:
             if cell.energy_per_conversion is not None:
                 sink_const.append(cell.energy_per_conversion * apo)
             else:
-                sink_fom.append((2.0 ** cell.resolution_bits * apo, inv_div))
+                sink_fom.append((2.0 ** cell.resolution_bits * apo, inv_div,
+                                 float(cell.resolution_bits)))
         else:
             raise TypeError(f"cannot lower A-Cell {type(cell).__name__}; "
                             f"extend plan._lower_component")
@@ -309,7 +315,7 @@ def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
     a_pad_coeff: List[float] = []
     a_ops: List[float] = []
     lin_terms: List[Tuple[int, float, float]] = []
-    fom_terms: List[Tuple[int, float, float]] = []
+    fom_terms: List[Tuple[int, float, float, float]] = []
     for idx, arr in enumerate(hw.analog_arrays):
         ops = ops_per_array.get(arr.name, 0.0)
         if ops == 0.0:
@@ -326,7 +332,7 @@ def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
         a_pad_coeff.append(1.0 / max(n_access, 1.0))
         a_ops.append(ops)
         lin_terms += [(a_idx, c, d) for c, d in lins]
-        fom_terms += [(a_idx, c, d) for c, d in foms]
+        fom_terms += [(a_idx, c, d, b) for c, d, b in foms]
         unit_names.append(arr.name)
         unit_cat.append(_CAT_INDEX[_category_for_array(arr, idx)])
         unit_on.append(1.0)
@@ -514,6 +520,7 @@ def lower(hw: HWConfig, stages: List[Stage], mapping: Mapping,
         fom_arr=fom_arr,
         fom_scale=np.array([t[1] for t in fom_terms]),
         fom_inv_div=np.array([t[2] for t in fom_terms]),
+        fom_bits=np.array([t[3] for t in fom_terms]),
         d_is_sys=d_is_sys, d_dyn_coeff=d_dyn, d_role=d_role,
         d_declared_node=d_node,
         d_static_power=d_static, d_clock_hz=d_clock,

@@ -66,6 +66,7 @@ def bank_layout(dims: BankDims) -> Dict[str, tuple]:
         ("a_const", (A,)), ("a_pad_coeff", (A,)), ("a_ops", (A,)),
         ("lin_arr", (L,)), ("lin_coeff", (L,)), ("lin_inv", (L,)),
         ("fom_arr", (F,)), ("fom_scale", (F,)), ("fom_inv", (F,)),
+        ("fom_bits", (F,)),
         ("d_valid", (D,)), ("d_is_sys", (D,)), ("d_dyn", (D,)),
         ("d_role", (D,)), ("d_node", (D,)), ("d_static", (D,)),
         ("d_clock", (D,)), ("d_cycles", (D,)), ("d_macs", (D,)),
@@ -169,6 +170,9 @@ def build_plan_bank(plans: Sequence[EnergyPlan]) -> PlanBank:
         "fom_arr": _pad1(col("fom_arr"), F, 0, i32),
         "fom_scale": _pad1(col("fom_scale"), F, 0.0, f32),
         "fom_inv": _pad1(col("fom_inv_div"), F, 1.0, f32),
+        # reference resolution for the adc_bits axis; padding rides 1.0
+        # (comparator-coded), which pins the modulation hook to 1
+        "fom_bits": _pad1(col("fom_bits"), F, 1.0, f32),
         # digital stages (Eqs. 14-15 + Sec. 4.1): zero cycles on a unit
         # clock -> zero-duration stages outside the valid mask
         "d_valid": _pad1([np.ones(len(p.d_is_sys), bool) for p in plans],

@@ -44,11 +44,16 @@ ride int32 and widen to int64 (scoped ``repro.compat.x64_context``) for
 grids >= 2**31 points.  ``index_range=`` streams a sub-range of the flat
 index space — the multi-host partitioning hook and the int64 test seam.
 
-    res = sweep_stream(["edgaze", "rhythmic"], grids, chunk_size=1 << 18)
+    from repro.explore import DesignSpace, explore
+    res = explore(DesignSpace(["edgaze", "rhythmic"], grids),
+                  engine="fused", chunk_size=1 << 18)
     res.topk[0]                        # best design point (full row)
     res.summaries["edgaze/3d_in"]      # per-variant min / mean / argmin
     res.dispatches, res.occupancy      # O(1) dispatch + masked-work audit
     stream_cache_info()                # {"step_compiles": 1, ...}
+
+(the old ``sweep_stream`` entry survives as a ``DeprecationWarning`` shim
+delegating through ``explore``)
 
 The compiled-executable cache is LRU-capped (``set_stream_cache_limit``,
 default 16 / ``REPRO_STREAM_CACHE_LIMIT``) so long-lived processes that
@@ -74,8 +79,9 @@ from ..kernels.grid_decode import grid_decode
 from ..kernels.runtime import resolve_interpret
 from ..kernels.stream_reduce import block_stats
 from ..launch.mesh import make_batch_mesh
-from .batch import (DesignPoints, OUT_KEYS, build_banked_eval,
-                    build_coeff_compute, eval_fn, make_points)
+from .batch import (DesignPoints, OUT_KEYS, _hooks_active,
+                    build_banked_eval, build_coeff_compute, eval_fn,
+                    make_points, points_from_axis_rows)
 from .plan import EnergyPlan, _EXTRA_CACHES
 from .plan_bank import PlanBank, build_plan_bank, evaluate_bank
 from .sweep import (AXES, _normalize_grids, axis_tables, lower_variant,
@@ -98,12 +104,12 @@ def _mesh_key(mesh) -> tuple:
     return (tuple(mesh.axis_names), tuple(d.id for d in mesh.devices.flat))
 
 
-def _sharded_fn(plan: EnergyPlan, mesh, keep: bool):
+def _sharded_fn(plan: EnergyPlan, mesh, keep: bool, hooks: bool):
     """The shard_map-wrapped evaluator (untraced) + its output keys."""
     fn = eval_fn(plan)
 
     def body(pts: DesignPoints):
-        return fn(pts, keep_unit_energies=keep)
+        return fn(pts, keep_unit_energies=keep, hooks=hooks)
 
     probe = jax.eval_shape(body, make_points(plan, mesh.devices.size))
     out_specs = {k: _BATCH_SPEC for k in probe}
@@ -111,20 +117,21 @@ def _sharded_fn(plan: EnergyPlan, mesh, keep: bool):
                      out_specs=out_specs), sorted(probe)
 
 
-def _sharded_exec(plan: EnergyPlan, mesh, batch: int, keep: bool):
+def _sharded_exec(plan: EnergyPlan, mesh, batch: int, keep: bool,
+                  hooks: bool):
     """AOT-compiled sharded evaluator for one padded batch size.
 
     Compilation is timed separately and cached on the plan, so sweeps
-    report warm throughput and recompile only on new (mesh, batch, flag)
+    report warm throughput and recompile only on new (mesh, batch, flags)
     combinations.  ``batch`` must be divisible by the mesh size.
     """
     if plan._exec_cache is None:
         plan._exec_cache = {}
-    key = ("shard", _mesh_key(mesh), batch, keep)
+    key = ("shard", _mesh_key(mesh), batch, keep, hooks)
     hit = plan._exec_cache.get(key)
     if hit is not None:
         return hit, 0.0
-    fn, _keys = _sharded_fn(plan, mesh, keep)
+    fn, _keys = _sharded_fn(plan, mesh, keep, hooks)
     t0 = time.perf_counter()
     exe = jax.jit(fn).lower(make_points(plan, batch)).compile()
     compile_s = time.perf_counter() - t0
@@ -150,7 +157,8 @@ def pad_points(points: DesignPoints, multiple: int
 
 def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
                            mesh=None, keep_unit_energies: bool = False,
-                           timings: Optional[Dict[str, float]] = None
+                           timings: Optional[Dict[str, float]] = None,
+                           hooks: Optional[bool] = None
                            ) -> Dict[str, np.ndarray]:
     """``evaluate_batch`` with the batch axis sharded across a mesh.
 
@@ -162,8 +170,9 @@ def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
     if mesh is None:
         mesh = make_batch_mesh()
     padded, b = pad_points(points, mesh.devices.size)
+    hooks = _hooks_active(points) if hooks is None else bool(hooks)
     exe, compile_s = _sharded_exec(plan, mesh, padded.batch,
-                                   bool(keep_unit_energies))
+                                   bool(keep_unit_energies), hooks)
     t0 = time.perf_counter()
     out = exe(padded)
     out = {k: np.asarray(v)[:b] for k, v in out.items()}
@@ -334,11 +343,7 @@ def _banked_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
         flat = s0 + jnp.arange(shard, dtype=idx_dtype)
         valid = flat < limit
         v = (start // n_var).astype(jnp.int32)   # chunk-uniform variant
-        points = DesignPoints(
-            cis_node=vals[0], soc_node=vals[1],
-            mem_tech=vals[2].astype(jnp.int32), sys_rows=vals[3],
-            sys_cols=vals[4], frame_rate=vals[5],
-            active_fraction_scale=vals[6], pixel_pitch_um=vals[7])
+        points = points_from_axis_rows(vals)
         out = fn_uniform(bank_arrays, v, points)
         ok = out["feasible"] & valid
         metric_v = out[metric].astype(jnp.float32)
@@ -530,6 +535,28 @@ def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     return entry
 
 
+def best_by_algorithm_summaries(summaries: Dict[str, Dict],
+                                default_algo: str) -> Dict[str, Dict]:
+    """Per-algorithm best variant from a summaries table.
+
+    Shared by :class:`StreamResult` and ``repro.explore.ExploreResult``
+    (same ``variant`` / ``algo/variant`` label convention) so the
+    grouping and tie handling cannot drift between the two surfaces.
+    """
+    groups: Dict[str, Dict[str, Dict]] = {}
+    for label, summ in summaries.items():
+        algo, _, variant = label.rpartition("/")
+        groups.setdefault(algo or default_algo, {})[variant] = summ
+    out: Dict[str, Dict] = {}
+    for algo, subs in groups.items():
+        variant, summ = min(subs.items(),
+                            key=lambda kv: kv[1]["metric_min"])
+        out[algo] = dict(variant=variant, summary=summ,
+                         n_feasible=sum(v["n_feasible"]
+                                        for v in subs.values()))
+    return out
+
+
 @dataclasses.dataclass
 class StreamResult:
     """Bounded result of a streaming mega-sweep.
@@ -583,21 +610,48 @@ class StreamResult:
         ``n_feasible`` sums over all the algorithm's variants.  Unlike
         ``topk``, every algorithm is guaranteed a record.
         """
-        groups: Dict[str, Dict[str, Dict]] = {}
-        for label, summ in self.summaries.items():
-            algo, _, variant = label.rpartition("/")
-            groups.setdefault(algo or self.algorithm, {})[variant] = summ
-        out: Dict[str, Dict] = {}
-        for algo, subs in groups.items():
-            variant, summ = min(subs.items(),
-                                key=lambda kv: kv[1]["metric_min"])
-            out[algo] = dict(variant=variant, summary=summ,
-                             n_feasible=sum(v["n_feasible"]
-                                            for v in subs.values()))
-        return out
+        return best_by_algorithm_summaries(self.summaries, self.algorithm)
 
 
 def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
+                 grids: Optional[Dict[str, Sequence]] = None, *,
+                 soc_node: int = 22, chunk_size: int = 1 << 18,
+                 metric: str = "total_j", k: int = 16, mesh=None,
+                 block_points: int = 4096,
+                 progress: Optional[Callable[[int, int], None]] = None,
+                 index_range: Optional[Tuple[int, int]] = None,
+                 pipeline_depth: int = 4, engine: str = "fused",
+                 superchunk: Optional[int] = None) -> StreamResult:
+    """DEPRECATED: use :func:`repro.explore.explore` with a
+    :class:`repro.explore.DesignSpace`.
+
+    Thin compatibility shim: builds the equivalent design space, runs it
+    through ``explore`` on the requested streaming engine and returns the
+    legacy :class:`StreamResult` (the same object ``ExploreResult``
+    wraps) — identical machinery, executables and caches.
+    """
+    import warnings
+    warnings.warn(
+        "repro.core.shard_sweep.sweep_stream() is deprecated; use "
+        "repro.explore.explore(DesignSpace(algorithms, grids), "
+        "engine='fused') — the unified ExploreResult exposes the "
+        "streaming stats directly",
+        DeprecationWarning, stacklevel=2)
+    if engine not in ("fused", "staged"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"valid: ['fused', 'staged']")
+    from ..explore import DesignSpace, explore
+    algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
+    space = DesignSpace(algorithms=algos, grids=grids, soc_node=soc_node)
+    res = explore(space, k=k, metric=metric, engine=engine,
+                  chunk_size=chunk_size, mesh=mesh,
+                  block_points=block_points, progress=progress,
+                  index_range=index_range, pipeline_depth=pipeline_depth,
+                  superchunk=superchunk)
+    return res.stream_result
+
+
+def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
                  grids: Optional[Dict[str, Sequence]] = None, *,
                  soc_node: int = 22, chunk_size: int = 1 << 18,
                  metric: str = "total_j", k: int = 16, mesh=None,

@@ -1,72 +1,58 @@
-"""Design-space sweeps: parameter grids -> batched energy evaluation.
+"""Grid-engine design-space sweeps: parameter grids -> batched evaluation.
 
-``sweep()`` is the architectural-exploration front door the paper promises
-(Sec. 6): give it an algorithm ("edgaze" / "rhythmic") and per-axis value
-grids, and it scores the full cartesian product — thousands to millions of
-design points — with one lowering + one compiled device call per
-structural variant.  The scalar ``estimate_energy`` path stays available
-as the reference oracle via :func:`scalar_point`.
+The exploration FRONT DOOR is :func:`repro.explore.explore` with a
+declarative :class:`repro.explore.DesignSpace` (ISSUE 5); this module is
+the grid ENGINE behind it — full O(N) result tables, one lowering + one
+compiled device call per structural variant per chunk — plus the scalar
+``estimate_energy`` reference oracle (:func:`scalar_point`).  The old
+``sweep()`` entry survives as a thin ``DeprecationWarning`` shim that
+delegates through ``explore``.
 
-    res = sweep("edgaze", {"variant": ["2d_in", "3d_in"],
-                           "cis_node": [130, 90, 65, 45, 28],
-                           "frame_rate": [15, 30, 60],
-                           "sys_rows": [8, 16, 32]})
-    best = res.best("total_j")
+    from repro.explore import DesignSpace, explore
+    res = explore(DesignSpace(["edgaze"],
+                              {"variant": ["2d_in", "3d_in"],
+                               "cis_node": [130, 90, 65, 45, 28],
+                               "frame_rate": [15, 30, 60],
+                               "sys_rows": [8, 16, 32]}))
+    best = res.best()
 
 Grids are walked through :class:`ChunkedGrid` — flat-index unraveling, so
-the full cartesian product is never materialized on host.  Pass
-``chunk_size=`` to bound the per-call batch (host memory stays O(chunk)
-during evaluation; the returned tables are still O(N)) and ``mesh=`` (a
-1-D ``("batch",)`` mesh, see ``repro.launch.mesh.make_batch_mesh``) to
-shard each batch across devices.  For sweeps too large to return N-row
-tables at all (>= 1e7 points), use ``repro.core.shard_sweep.sweep_stream``
-— same grids, bounded streaming result.
+the full cartesian product is never materialized on host.  ``chunk_size=``
+bounds the per-call batch (host memory stays O(chunk) during evaluation;
+the returned tables are still O(N)) and ``mesh=`` (a 1-D ``("batch",)``
+mesh, see ``repro.launch.mesh.make_batch_mesh``) shards each batch across
+devices.  For sweeps too large to return N-row tables at all (>= 1e7
+points), ``explore`` picks the streaming engine
+(``repro.core.shard_sweep``) — same grids, bounded result.
+
+Axis names/order, defaults, value coding and the coefficient hooks all
+come from the axis registry (``repro.core.axes``); algorithms resolve via
+the pluggable registry (``repro.core.algorithms``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .batch import (TECH_DECLARED, evaluate_batch, make_points,
+from .algorithms import get_algorithm
+from .axes import AXES, TECH_DECLARED, _tech_code
+from .batch import (evaluate_batch, grid_hooks_active, make_points,
                     point_defaults)
 from .digital import SystolicArray
 from .energy import estimate_energy, reference_outputs
 from .plan import (CATEGORIES, EnergyPlan, TECH_INDEX, _EXTRA_CACHES,
                    count_cache_hit, lower)
-from .usecases.edgaze import EDGAZE_VARIANTS, build_edgaze
-from .usecases.rhythmic import RHYTHMIC_VARIANTS, build_rhythmic
-
-ALGORITHMS = {
-    "edgaze": (build_edgaze, EDGAZE_VARIANTS),
-    "rhythmic": (build_rhythmic, RHYTHMIC_VARIANTS),
-}
-
-#: numeric sweep axes (everything except the structural ``variant`` axis)
-AXES = ("cis_node", "soc_node", "mem_tech", "sys_rows", "sys_cols",
-        "frame_rate", "active_fraction_scale", "pixel_pitch_um")
 
 _REF_CIS_NODE = 65   # structures are built once here and re-scaled per point
 
 
-def _tech_code(v) -> int:
-    if v is None or v == "declared" or v == TECH_DECLARED:
-        return TECH_DECLARED
-    if isinstance(v, str):
-        if v not in TECH_INDEX:
-            raise KeyError(f"unknown memory technology {v!r}; valid: "
-                           f"{sorted(TECH_INDEX)} or 'declared'")
-        return TECH_INDEX[v]
-    return int(v)
-
-
 def _algorithm(name: str):
-    if name not in ALGORITHMS:
-        raise KeyError(f"unknown algorithm {name!r}; valid: "
-                       f"{sorted(ALGORITHMS)}")
-    return ALGORITHMS[name]
+    spec = get_algorithm(name)       # KeyError lists registered names
+    return spec.builder, spec.variants
 
 
 class ChunkedGrid:
@@ -252,7 +238,35 @@ def sweep(algorithm: str = "edgaze",
           grids: Optional[Dict[str, Sequence]] = None, *,
           soc_node: int = 22, strict: bool = False,
           chunk_size: Optional[int] = None, mesh=None) -> SweepResult:
-    """Score the cartesian product of the given parameter grids.
+    """DEPRECATED: use :func:`repro.explore.explore` with a
+    :class:`repro.explore.DesignSpace`.
+
+    Thin compatibility shim: builds the equivalent one-algorithm design
+    space, runs it through ``explore`` on the grid engine (``chunked``
+    when ``chunk_size`` is given, ``monolithic`` otherwise) and returns
+    the legacy per-algorithm :class:`SweepResult` — bit-identical to the
+    pre-ISSUE-5 behavior (parity-tested in tests/test_explore.py).
+    """
+    warnings.warn(
+        "repro.core.sweep.sweep() is deprecated; use "
+        "repro.explore.explore(DesignSpace([algorithm], grids)) — the "
+        "unified ExploreResult keeps the full tables via .sweep_results",
+        DeprecationWarning, stacklevel=2)
+    from ..explore import DesignSpace, explore
+    space = DesignSpace(algorithms=(algorithm,), grids=grids,
+                        soc_node=soc_node)
+    res = explore(space, metric="total_j",
+                  engine="chunked" if chunk_size is not None
+                  else "monolithic",
+                  chunk_size=chunk_size, mesh=mesh, strict=strict)
+    return res.sweep_results[algorithm]
+
+
+def _sweep_impl(algorithm: str = "edgaze",
+                grids: Optional[Dict[str, Sequence]] = None, *,
+                soc_node: int = 22, strict: bool = False,
+                chunk_size: Optional[int] = None, mesh=None) -> SweepResult:
+    """Grid engine: score the cartesian product of the parameter grids.
 
     ``grids`` maps axis names (``variant`` + :data:`AXES`) to value lists;
     missing axes default to the values each variant was built with.  One
@@ -273,6 +287,9 @@ def sweep(algorithm: str = "edgaze",
     """
     t0 = time.perf_counter()
     variants, grids = _normalize_grids(algorithm, grids)
+    # one sweep-level hook decision (vs a per-chunk point readback): a
+    # grid at the hook defaults rides the hook-free executable
+    hooks = grid_hooks_active(grids)
     if mesh is not None:
         from .shard_sweep import evaluate_batch_sharded
 
@@ -292,9 +309,10 @@ def sweep(algorithm: str = "edgaze",
             points = make_points(plan, n, **flat)
             if mesh is not None:
                 out = evaluate_batch_sharded(plan, points, mesh=mesh,
-                                             timings=timings)
+                                             timings=timings, hooks=hooks)
             else:
-                out = evaluate_batch(plan, points, timings=timings)
+                out = evaluate_batch(plan, points, timings=timings,
+                                     hooks=hooks)
             if strict and not bool(out["feasible"].all()):
                 bad = int((~out["feasible"].astype(bool)).sum())
                 raise ValueError(
@@ -327,13 +345,26 @@ def scalar_point(algorithm: str, variant: str, *,
                  sys_cols: Optional[float] = None,
                  frame_rate: Optional[float] = None,
                  active_fraction_scale: float = 1.0,
-                 pixel_pitch_um: Optional[float] = None) -> Dict[str, float]:
+                 pixel_pitch_um: Optional[float] = None,
+                 vdd_scale: float = 1.0,
+                 adc_bits: float = -1.0) -> Dict[str, float]:
     """Evaluate ONE design point through the scalar ``estimate_energy``.
 
     Rebuilds the variant at the requested node and patches the remaining
     swept knobs onto the ``HWConfig`` — exactly what a pre-batching sweep
     loop had to do per point.  Returns the batched output schema.
+
+    The scalar walk prices the *declared* structure, so the coefficient-
+    hook axes (``vdd_scale`` / ``adc_bits``, see ``repro.core.axes``) are
+    only accepted at their defaults; for non-default values the banked
+    evaluators are each other's parity oracle (``engine="staged"`` vs
+    ``engine="fused"`` vs the per-plan path, tests/test_explore.py).
     """
+    if vdd_scale != 1.0 or (adc_bits is not None and adc_bits >= 0):
+        raise NotImplementedError(
+            "the scalar oracle does not model the vdd_scale / adc_bits "
+            "coefficient hooks; validate those axes against "
+            "explore(..., engine='staged')")
     hw, stages, mapping, _meta = build_variant(
         algorithm, variant, cis_node=int(cis_node), soc_node=int(soc_node))
     if frame_rate is not None:

@@ -1,21 +1,19 @@
 """Run the Sec. 6 studies: energy tables (Fig. 9/11) + power density (Tbl. 3).
 
-``run_study`` rides the batched energy engine: each structural variant is
-lowered once (``repro.core.plan``) and all requested CIS nodes are scored
-in a single compiled device call (``repro.core.batch``), walked through
-the chunked-grid sweep front door — pass ``chunk_size=`` / ``mesh=``
-through to shard the evaluation across devices exactly like any other
-sweep (``repro.core.shard_sweep``).  The scalar walk survives as
-``engine="scalar"`` — it is the reference oracle the parity tests hold
-the batched path against.
+``run_study`` rides the batched energy engine through the declarative
+``repro.explore`` front door: each structural variant is lowered once
+(``repro.core.plan``) and all requested CIS nodes are scored in a single
+compiled device call (``repro.core.batch``) — pass ``chunk_size=`` /
+``mesh=`` through to shard the evaluation across devices exactly like
+any other exploration.  The scalar walk survives as ``engine="scalar"``
+— it is the reference oracle the parity tests hold the batched path
+against.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
 from ..energy import estimate_energy
-from .edgaze import EDGAZE_VARIANTS, build_edgaze
-from .rhythmic import RHYTHMIC_VARIANTS, build_rhythmic
 
 
 def power_density(hw, report) -> Dict[str, float]:
@@ -32,8 +30,8 @@ def power_density(hw, report) -> Dict[str, float]:
 
 
 def _variants(algorithm: str):
-    return (RHYTHMIC_VARIANTS if algorithm == "rhythmic"
-            else EDGAZE_VARIANTS)
+    from ..algorithms import get_algorithm
+    return get_algorithm(algorithm).variants
 
 
 def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
@@ -51,11 +49,15 @@ def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
     if engine == "scalar":
         return _run_study_scalar(algorithm, cis_nodes, soc_node, strict)
 
-    from ..sweep import sweep  # local import: sweep builds on the use-cases
-    res = sweep(algorithm, {"variant": list(_variants(algorithm)),
-                            "cis_node": list(cis_nodes)},
-                soc_node=soc_node, strict=strict,
-                chunk_size=chunk_size, mesh=mesh)
+    # local import: the explore layer builds on the use-cases
+    from ...explore import DesignSpace, explore
+    space = DesignSpace([algorithm],
+                        {"variant": list(_variants(algorithm)),
+                         "cis_node": list(cis_nodes)},
+                        soc_node=soc_node)
+    res = explore(space, engine=("chunked" if chunk_size else "monolithic"),
+                  chunk_size=chunk_size, mesh=mesh,
+                  strict=strict).sweep_results[algorithm]
     rows = []
     for node in cis_nodes:
         for variant in _variants(algorithm):
@@ -77,7 +79,8 @@ def run_study(algorithm: str, cis_nodes=(130, 65), soc_node: int = 22,
 
 def _run_study_scalar(algorithm: str, cis_nodes, soc_node: int,
                       strict: bool) -> List[Dict]:
-    build = {"rhythmic": build_rhythmic, "edgaze": build_edgaze}[algorithm]
+    from ..algorithms import get_algorithm
+    build = get_algorithm(algorithm).builder
     rows = []
     for node in cis_nodes:
         for variant in _variants(algorithm):

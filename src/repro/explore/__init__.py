@@ -1,0 +1,52 @@
+"""One front door for architectural exploration (ISSUE 5).
+
+The paper's promise (Sec. 6) is design-space exploration; this package is
+its single declarative surface:
+
+    from repro.explore import DesignSpace, explore, register_algorithm
+
+    space = DesignSpace(["edgaze", "rhythmic"],
+                        {"cis_node": [130, 65, 28],
+                         "frame_rate": [15, 30, 60],
+                         "vdd_scale": [0.8, 1.0, 1.2],
+                         "adc_bits": [-1, 8, 12]})
+    res = explore(space, k=8)            # auto-picks the engine
+    res.best(), res.summaries, res.occupancy, res.cache
+
+* :class:`DesignSpace` — validated declarative problem description with
+  the flat-index codec (``encode`` / ``decode``) of the variant-major
+  design stream;
+* :func:`explore` — one entry over the monolithic / chunked / streaming-
+  fused engines, always returning a unified :class:`ExploreResult`;
+* :func:`register_algorithm` — pluggable pipeline registry (Ed-Gaze and
+  Rhythmic are ordinary entries; add your own without touching core);
+* :func:`axis_specs` / :func:`axis_names` — the declarative axis
+  registry, including the coefficient-hook knobs ``vdd_scale`` and
+  ``adc_bits`` that sweep through PlanBank columns with zero recompiles.
+
+The legacy ``repro.core.sweep.sweep`` / ``repro.core.shard_sweep.
+sweep_stream`` entries survive as ``DeprecationWarning`` shims delegating
+here.  This public surface is pinned by an API-snapshot test
+(tests/data/explore_api.txt).
+"""
+from ..core.algorithms import (AlgorithmSpec, algorithm_names,
+                               get_algorithm, register_algorithm,
+                               unregister_algorithm)
+from ..core.axes import Axis
+from .api import ENGINES, ExploreResult, explore
+from .space import DesignSpace, axis_names, axis_specs
+
+__all__ = [
+    "AlgorithmSpec",
+    "Axis",
+    "DesignSpace",
+    "ENGINES",
+    "ExploreResult",
+    "algorithm_names",
+    "axis_names",
+    "axis_specs",
+    "explore",
+    "get_algorithm",
+    "register_algorithm",
+    "unregister_algorithm",
+]

@@ -1,0 +1,392 @@
+"""ISSUE 5: the declarative DesignSpace / explore() front door.
+
+Covers the five contract pillars of the API redesign:
+
+* the legacy ``sweep()`` / ``sweep_stream()`` entries are thin
+  ``DeprecationWarning`` shims whose results match ``explore()`` at rel
+  1e-6 on top-k / summaries / feasible counts (here: exactly — same
+  machinery, same executables);
+* bad input (unknown axis names like the ``frame_rte`` typo, unknown
+  algorithms, unknown variants, unknown metrics) raises ``KeyError`` /
+  ``ValueError`` AT the API boundary with the valid names listed;
+* the flat-index codec round-trips across mixed structural / numeric /
+  tech axes (fixed cases + hypothesis);
+* the pluggable algorithm registry: register, duplicate rejection,
+  error messages listing registered names — and a registered toy
+  pipeline sweeping through the SAME single streaming step executable;
+* the coefficient-hook axes ``vdd_scale`` / ``adc_bits`` match the
+  staged oracle (and the per-plan grid engine) at rel 1e-6 with the
+  one-executable invariant intact, and their physics is exact: default
+  values are bit-level no-ops, +1 ADC bit doubles the FoM conversion
+  energy, vdd scales dynamic terms quadratically.
+
+The public surface of ``repro.explore`` is pinned against
+tests/data/explore_api.txt.
+"""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.explore import (DesignSpace, algorithm_names, explore,
+                           register_algorithm, unregister_algorithm)
+
+REL = 1e-6
+
+GRIDS = {"variant": ["2d_in", "3d_in"],
+         "cis_node": [130.0, 65.0],
+         "frame_rate": [15.0, 30.0, 60.0],
+         "vdd_scale": [0.9, 1.0],
+         "adc_bits": [-1.0, 12.0]}
+
+
+@pytest.fixture
+def toy_algorithm():
+    from repro.core.usecases.toy import TOY_VARIANTS, build_toy
+    register_algorithm("toy", build_toy, TOY_VARIANTS)
+    try:
+        yield "toy"
+    finally:
+        unregister_algorithm("toy")
+
+
+def _assert_explore_equal(a, b, *, rtol=REL):
+    """topk / summaries / feasible-count parity between two results."""
+    assert a.n_points == b.n_points
+    assert a.n_feasible == b.n_feasible
+    np.testing.assert_allclose([r[a.metric] for r in a.topk],
+                               [r[b.metric] for r in b.topk], rtol=rtol)
+    assert sorted(a.summaries) == sorted(b.summaries)
+    for label, sa in a.summaries.items():
+        sb = b.summaries[label]
+        assert sa["n"] == sb["n"] and sa["n_feasible"] == sb["n_feasible"]
+        for key, rt in (("metric_min", rtol), ("metric_mean", 1e-5)):
+            if np.isnan(sa[key]) or np.isnan(sb[key]):
+                assert np.isnan(sa[key]) and np.isnan(sb[key]), (label, key)
+            else:
+                np.testing.assert_allclose(sa[key], sb[key], rtol=rt,
+                                           err_msg=f"{label}.{key}")
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims == explore()
+# ---------------------------------------------------------------------------
+def test_sweep_shim_warns_and_matches_explore():
+    from repro.core.sweep import sweep
+    with pytest.warns(DeprecationWarning, match="sweep.. is deprecated"):
+        legacy = sweep("edgaze", GRIDS)
+    direct = explore(DesignSpace(["edgaze"], GRIDS), engine="monolithic")
+    assert direct.engine == "monolithic"
+    res = direct.sweep_results["edgaze"]
+    assert len(legacy) == len(res) == direct.n_points
+    for key in legacy.outputs:
+        np.testing.assert_array_equal(legacy.outputs[key],
+                                      res.outputs[key], err_msg=key)
+    for key in legacy.params:
+        np.testing.assert_array_equal(legacy.params[key],
+                                      res.params[key], err_msg=key)
+    np.testing.assert_allclose(
+        [r["total_j"] for r in legacy.best("total_j", k=5)],
+        [r["total_j"] for r in direct.best(5)], rtol=REL)
+    assert direct.n_feasible == int(
+        legacy.outputs["feasible"].astype(bool).sum())
+
+
+def test_sweep_stream_shim_warns_and_matches_explore():
+    from repro.core.shard_sweep import sweep_stream
+    with pytest.warns(DeprecationWarning, match="sweep_stream"):
+        legacy = sweep_stream(["edgaze", "rhythmic"], GRIDS,
+                              chunk_size=8, k=5)
+    direct = explore(DesignSpace(["edgaze", "rhythmic"], GRIDS),
+                     engine="fused", chunk_size=8, k=5)
+    assert direct.engine == "fused"
+    assert direct.stream_result is not None
+    _assert_explore_equal(direct, direct)
+    assert legacy.n_points == direct.n_points
+    assert legacy.n_feasible == direct.n_feasible
+    np.testing.assert_allclose([r["total_j"] for r in legacy.topk],
+                               [r["total_j"] for r in direct.topk],
+                               rtol=REL)
+    assert legacy.summaries.keys() == direct.summaries.keys()
+    for label in legacy.summaries:
+        np.testing.assert_allclose(
+            legacy.summaries[label]["metric_min"],
+            direct.summaries[label]["metric_min"], rtol=REL)
+
+
+# ---------------------------------------------------------------------------
+# boundary validation (ISSUE 5 bugfix satellite)
+# ---------------------------------------------------------------------------
+def test_unknown_axis_typo_rejected_at_the_boundary():
+    """A typo like 'frame_rte' must raise a KeyError listing the valid
+    axes at DesignSpace construction, not fail deep inside lowering."""
+    with pytest.raises(KeyError, match="unknown sweep axes") as ei:
+        DesignSpace(["edgaze"], {"frame_rte": [30.0]})
+    assert "frame_rate" in str(ei.value)        # the valid axes are listed
+    assert "vdd_scale" in str(ei.value)
+    # the deprecated shims inherit the same boundary check
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import sweep
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError, match="unknown sweep axes"):
+            sweep("edgaze", {"frame_rte": [30.0]})
+        with pytest.raises(KeyError, match="unknown sweep axes"):
+            sweep_stream("edgaze", {"frame_rte": [30.0]})
+
+
+def test_duplicate_algorithms_variants_and_values_rejected():
+    """Duplicates would double-count points, collide summaries and break
+    the encode/decode round-trip (code-review regressions)."""
+    with pytest.raises(ValueError, match="duplicate algorithms"):
+        DesignSpace(["edgaze", "edgaze"], {"cis_node": [65.0]})
+    with pytest.raises(ValueError, match="duplicate variants"):
+        DesignSpace(["edgaze"], {"variant": ["2d_in", "2d_in"]})
+    with pytest.raises(ValueError, match="duplicate values"):
+        DesignSpace(["edgaze"], {"cis_node": [65.0, 65.0]})
+    with pytest.raises(ValueError, match="duplicate values"):
+        # distinct names, same code: both encode to sram_hp
+        DesignSpace(["edgaze"], {"mem_tech": ["sram_hp", 1]})
+
+
+def test_default_batches_compile_hook_free_executable():
+    """Batches at the coefficient-hook defaults must run the pre-hook
+    graph: the hook flag specializes the executable statically, so
+    sweeps that never touch vdd_scale/adc_bits pay zero arithmetic for
+    them (code-review perf regression)."""
+    from repro.core.batch import _hooks_active, evaluate_batch, make_points
+    from repro.core.sweep import lower_variant
+    plan = lower_variant("edgaze", "2d_in")
+    plan._exec_cache = {}                      # fresh accounting
+    dflt = make_points(plan, 8, cis_node=[130.0] * 8)
+    assert not _hooks_active(dflt)
+    hooked = make_points(plan, 8, cis_node=[130.0] * 8,
+                         vdd_scale=[1.0] * 7 + [1.1])
+    assert _hooks_active(hooked)
+    out_d = evaluate_batch(plan, dflt)
+    assert set(plan._exec_cache) == {(8, False, False)}
+    out_h = evaluate_batch(plan, hooked)
+    assert set(plan._exec_cache) == {(8, False, False), (8, False, True)}
+    # the hooked executable agrees with the hook-free one at identity
+    # values (rows 0..6 sit at vdd=1.0)
+    np.testing.assert_allclose(out_h["total_j"][:7], out_d["total_j"][:7],
+                               rtol=REL)
+    assert out_h["total_j"][7] != out_d["total_j"][7]
+
+
+def test_unknown_algorithm_variant_metric_engine_rejected():
+    with pytest.raises(KeyError, match="unknown algorithm") as ei:
+        DesignSpace(["edgase"], {})
+    assert "edgaze" in str(ei.value) and "rhythmic" in str(ei.value)
+    with pytest.raises(KeyError, match="unknown variants") as ei:
+        DesignSpace(["edgaze"], {"variant": ["4d_in"]})
+    assert "3d_in" in str(ei.value)
+    space = DesignSpace(["edgaze"], {"cis_node": [65.0]})
+    with pytest.raises(KeyError, match="unknown metric") as ei:
+        explore(space, metric="total_jj")
+    assert "total_j" in str(ei.value)
+    with pytest.raises(ValueError, match="unknown engine"):
+        explore(space, engine="warp")
+    with pytest.raises(ValueError, match="streaming engine"):
+        explore(space, engine="monolithic", index_range=(0, 4))
+    with pytest.raises(ValueError, match="streaming engine"):
+        explore(space, engine="monolithic", block_points=128)
+    with pytest.raises(ValueError, match="streaming engine"):
+        explore(space, engine="chunked", pipeline_depth=8)
+    with pytest.raises(ValueError, match="grid engine"):
+        explore(space, engine="fused", strict=True)
+
+
+def test_auto_engine_selection():
+    space = DesignSpace(["edgaze"], {"cis_node": [130.0, 65.0]})
+    assert explore(space).engine == "monolithic"
+    assert explore(space, chunk_size=4).engine == "chunked"
+    assert explore(space, index_range=(0, 6)).engine == "fused"
+
+
+# ---------------------------------------------------------------------------
+# flat-index codec round-trip (fixed + hypothesis)
+# ---------------------------------------------------------------------------
+def _codec_case(algorithms, grids, indices):
+    space = DesignSpace(algorithms, grids)
+    for i in indices:
+        i = int(i) % space.n_points
+        point = space.decode(i)
+        assert set(point) == {"algorithm", "variant"} | set(
+            space.resolved_grid(0).names)
+        assert space.encode(**point) == i, (i, point)
+
+
+def test_design_space_codec_fixed_cases():
+    """Mixed structural / numeric / tech axes, both algorithms, unswept
+    defaults (which differ per variant), sentinel codes."""
+    grids = {"cis_node": [130.0, 65.0, 28.0],
+             "mem_tech": ["declared", "sram_hp", "stt"],
+             "frame_rate": [15.0, 60.0],
+             "adc_bits": [-1.0, 10.0]}
+    space = DesignSpace(["edgaze", "rhythmic"], grids)
+    assert space.n_variants == 8 and space.n_var == 36
+    _codec_case(["edgaze", "rhythmic"], grids,
+                np.linspace(0, space.n_points - 1, 13))
+    # encoding accepts tech NAMES as well as codes
+    p = space.decode(40)
+    assert p["mem_tech"] in (-1.0, 1.0, 2.0)
+    name = {-1.0: "declared", 1.0: "sram_hp", 2.0: "stt"}[p["mem_tech"]]
+    assert space.encode(**dict(p, mem_tech=name)) == 40
+    # boundary errors
+    with pytest.raises(IndexError):
+        space.decode(space.n_points)
+    with pytest.raises(KeyError, match="not on axis"):
+        space.encode(**dict(p, cis_node=131.0))
+    with pytest.raises(KeyError, match="not a.*variant slot"):
+        space.encode(**dict(p, variant="definitely_not"))
+
+
+def test_design_space_codec_property():
+    """Hypothesis sweep over axis subsets, lengths and flat indices
+    (skips without hypothesis, mirroring the grid_decode tests)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    pools = {"cis_node": [130.0, 90.0, 65.0, 45.0, 28.0],
+             "frame_rate": [15.0, 30.0, 60.0, 120.0],
+             "sys_rows": [8.0, 16.0, 32.0],
+             "mem_tech": ["declared", "sram", "sram_hp", "stt"],
+             "vdd_scale": [0.8, 1.0, 1.2],
+             "adc_bits": [-1.0, 8.0, 12.0]}
+    strategy = st.tuples(
+        st.integers(min_value=1, max_value=2),            # n algorithms
+        st.lists(st.integers(min_value=1, max_value=4),   # axis lengths
+                 min_size=len(pools), max_size=len(pools)),
+        st.lists(st.integers(min_value=0, max_value=2 ** 31 - 1),
+                 min_size=3, max_size=3),                 # flat indices
+    )
+
+    @hyp.settings(max_examples=12, deadline=None)
+    @hyp.given(strategy)
+    def run(params):
+        n_algos, lens, indices = params
+        grids = {ax: pool[:n] for (ax, pool), n in zip(pools.items(), lens)
+                 if n > 0}
+        _codec_case(["edgaze", "rhythmic"][:n_algos], grids, indices)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# pluggable algorithm registry
+# ---------------------------------------------------------------------------
+def test_registry_register_and_explore(toy_algorithm):
+    assert "toy" in algorithm_names()
+    res = explore(DesignSpace(["toy"], {"cis_node": [130.0, 65.0]}), k=3)
+    assert res.n_points == 4                   # 2 toy variants x 2 nodes
+    assert res.n_feasible == 4
+    assert {r["algorithm"] for r in res.topk} == {"toy"}
+    assert sorted(res.summaries) == ["2d_in", "2d_off"]
+
+
+def test_registry_duplicate_name_rejected(toy_algorithm):
+    from repro.core.usecases.toy import TOY_VARIANTS, build_toy
+    with pytest.raises(ValueError, match="already registered"):
+        register_algorithm("toy", build_toy, TOY_VARIANTS)
+    register_algorithm("toy", build_toy, TOY_VARIANTS, overwrite=True)
+    with pytest.raises(ValueError, match="at least one variant"):
+        register_algorithm("toy2", build_toy, ())
+
+
+def test_registry_unknown_names_listed():
+    with pytest.raises(KeyError) as ei:
+        unregister_algorithm("never_registered")
+    assert "edgaze" in str(ei.value)
+    from repro.explore import get_algorithm
+    with pytest.raises(KeyError) as ei:
+        get_algorithm("never_registered")
+    assert "rhythmic" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: new axes + registered algorithm vs the staged oracle,
+# one-executable invariant intact
+# ---------------------------------------------------------------------------
+def test_new_axes_and_registered_algorithm_match_staged_oracle(
+        toy_algorithm):
+    from repro.core.shard_sweep import stream_cache_clear, stream_cache_info
+    grids = {"cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [30.0, 60.0],
+             "vdd_scale": [0.8, 1.0, 1.2],
+             "adc_bits": [-1.0, 8.0, 12.0]}
+    space = DesignSpace(["edgaze", "toy"], grids)
+    assert space.n_variants == 7               # 5 edgaze + 2 toy
+    stream_cache_clear()
+    fused = explore(space, engine="fused", chunk_size=16, k=6)
+    info = stream_cache_info()
+    assert info["step_compiles"] == 1 and info["size"] == 1, info
+    staged = explore(space, engine="staged", chunk_size=16, k=6)
+    _assert_explore_equal(fused, staged)
+    assert [(r["algorithm"], r["variant"]) for r in fused.topk] \
+        == [(r["algorithm"], r["variant"]) for r in staged.topk]
+    # and against the per-plan grid engine (third parity-locked form)
+    mono = explore(space, engine="monolithic", k=6)
+    _assert_explore_equal(fused, mono)
+    # the toy summaries carry the algo/variant label convention
+    assert "toy/2d_in" in fused.summaries
+
+
+# ---------------------------------------------------------------------------
+# coefficient-hook physics: exact no-op defaults, exact modulation
+# ---------------------------------------------------------------------------
+def test_vdd_adc_axes_semantics():
+    from repro.core.batch import evaluate_batch, make_points
+    from repro.core.sweep import lower_variant
+    plan = lower_variant("rhythmic", "2d_in")
+    base = evaluate_batch(plan, make_points(plan, 1))
+    explicit = evaluate_batch(plan, make_points(plan, 1, vdd_scale=[1.0],
+                                                adc_bits=[-1.0]))
+    for key in base:                           # defaults are bit-exact no-ops
+        np.testing.assert_array_equal(base[key], explicit[key], err_msg=key)
+
+    # +1 ADC bit doubles the Walden conversion energy (rhythmic's ADC is
+    # lowered at 8 bits and its category is pure FoM)
+    out = evaluate_batch(plan, make_points(plan, 3,
+                                           adc_bits=[8.0, 9.0, -1.0]))
+    np.testing.assert_allclose(out["cat_ADC_j"][1],
+                               2.0 * out["cat_ADC_j"][0], rtol=REL)
+    np.testing.assert_allclose(out["cat_ADC_j"][2], out["cat_ADC_j"][0],
+                               rtol=REL)       # declared == lowered bits
+    np.testing.assert_array_equal(out["t_d_s"], np.repeat(out["t_d_s"][:1],
+                                                          3))
+
+    # vdd scales dynamic terms quadratically; timing/area/feasibility are
+    # voltage-independent in this first-order model
+    out = evaluate_batch(plan, make_points(plan, 2, vdd_scale=[1.0, 2.0]))
+    assert out["total_j"][1] > out["total_j"][0]
+    np.testing.assert_allclose(out["cat_ADC_j"][1],
+                               4.0 * out["cat_ADC_j"][0], rtol=REL)
+    np.testing.assert_array_equal(out["t_d_s"][0], out["t_d_s"][1])
+    np.testing.assert_array_equal(out["area_mm2"][0], out["area_mm2"][1])
+
+    # the scalar oracle prices the declared structure only
+    from repro.core.sweep import scalar_point
+    with pytest.raises(NotImplementedError):
+        scalar_point("rhythmic", "2d_in", vdd_scale=1.1)
+    with pytest.raises(NotImplementedError):
+        scalar_point("rhythmic", "2d_in", adc_bits=10)
+
+
+# ---------------------------------------------------------------------------
+# API-surface snapshot (CI satellite)
+# ---------------------------------------------------------------------------
+def test_public_api_surface_pinned():
+    import inspect
+
+    import repro.explore as ex
+    golden_path = os.path.join(os.path.dirname(__file__), "data",
+                               "explore_api.txt")
+    with open(golden_path) as f:
+        golden = sorted(line.strip() for line in f if line.strip())
+    assert sorted(ex.__all__) == golden, (
+        "public surface of repro.explore changed; update "
+        "tests/data/explore_api.txt deliberately")
+    public = sorted(name for name in dir(ex)
+                    if not name.startswith("_")
+                    and not inspect.ismodule(getattr(ex, name)))
+    assert public == golden, public

@@ -152,17 +152,21 @@ def test_superchunk_single_executable_and_dispatch_drop():
     it ceil(n_chunks / superchunk) times."""
     from repro.core.shard_sweep import (stream_cache_clear,
                                         stream_cache_info, sweep_stream)
+    from repro.launch.mesh import make_batch_mesh
+    # chunk/dispatch arithmetic is device-count dependent; pin 1 device
+    # so the expectations hold under the forced-8-device CI lane too
+    mesh = make_batch_mesh(1)
     grids = {"variant": ["2d_in", "3d_in", "2d_off"],
              "cis_node": [130.0, 65.0, 28.0],
              "frame_rate": [15.0, 30.0],
              "sys_rows": [8.0, 16.0]}
     stream_cache_clear()
-    res = sweep_stream("edgaze", grids, chunk_size=4, k=3)
+    res = sweep_stream("edgaze", grids, chunk_size=4, k=3, mesh=mesh)
     info = stream_cache_info()
     assert info["step_compiles"] == 1 and info["size"] == 1, info
     # 3 variants x 12 points at chunk 4 = 9 chunks, folded into one scan
     assert res.dispatches == 1 and res.superchunk == 9
-    res2 = sweep_stream("edgaze", grids, chunk_size=4, k=3)
+    res2 = sweep_stream("edgaze", grids, chunk_size=4, k=3, mesh=mesh)
     info = stream_cache_info()
     assert info["step_compiles"] == 1 and info["hits"] == 1, info
     _assert_stream_equal(res2, res)
@@ -176,10 +180,12 @@ def test_occupancy_clamps_small_variant_chunks():
     span-sized masked tails on every chunk: the driver clamps the chunk
     to the span and reports the (near-)full occupancy."""
     from repro.core.shard_sweep import sweep_stream
+    from repro.launch.mesh import make_batch_mesh
     grids = {"variant": ["2d_in", "3d_in"],
              "cis_node": [130.0, 65.0, 28.0],
              "frame_rate": [15.0, 30.0]}          # span = 6 per variant
-    res = sweep_stream("edgaze", grids, chunk_size=1 << 18, k=3)
+    res = sweep_stream("edgaze", grids, chunk_size=1 << 18, k=3,
+                       mesh=make_batch_mesh(1))   # device-count pinned
     assert res.chunk_size == 6                    # clamped to the span
     assert res.occupancy == 1.0
     assert res.n_points == 12
@@ -187,12 +193,13 @@ def test_occupancy_clamps_small_variant_chunks():
 
 def test_occupancy_reports_masked_tail_work():
     from repro.core.shard_sweep import sweep_stream
+    from repro.launch.mesh import make_batch_mesh
     grids = {"variant": ["2d_in"],
              "cis_node": [130.0, 65.0, 28.0],
              "frame_rate": [15.0, 30.0, 60.0]}    # span = 9
     for engine in ("fused", "staged"):
         res = sweep_stream("edgaze", grids, chunk_size=4, k=3,
-                           engine=engine)
+                           engine=engine, mesh=make_batch_mesh(1))
         # 3 chunks of 4 dispatched for 9 valid points
         assert res.occupancy == pytest.approx(9 / 12), engine
 
