@@ -36,7 +36,16 @@ def comparable(a: dict, b: dict) -> bool:
     return all(a.get(key) == b.get(key) for key in COMPARABLE)
 
 
+def _numeric(value) -> bool:
+    """True for real throughput numbers; rejects bools, strings and
+    anything else a corrupt/hand-edited history row might carry."""
+    return (isinstance(value, (int, float))
+            and not isinstance(value, bool))
+
+
 def check(tolerance: float = 0.30, window: int = 3) -> int:
+    # read_history already skips corrupt / truncated / non-object lines
+    # (with a warning); an empty or absent file is just "no history"
     rows = [r for r in read_history("mega_sweep")
             if r.get("schema") == HISTORY_SCHEMA]
     if not rows:
@@ -54,10 +63,15 @@ def check(tolerance: float = 0.30, window: int = 3) -> int:
     failed = []
     for metric in METRICS:
         new = current.get(metric)
-        base_vals = [r[metric] for r in prior if metric in r]
-        if new is None or not base_vals:
-            print(f"perf-guard: {metric} missing from current or baseline "
-                  f"rows — skipped")
+        dropped = [r for r in prior
+                   if metric in r and not _numeric(r.get(metric))]
+        if dropped:
+            print(f"perf-guard: warning — ignoring {len(dropped)} "
+                  f"baseline row(s) with non-numeric {metric}")
+        base_vals = [r[metric] for r in prior if _numeric(r.get(metric))]
+        if not _numeric(new) or not base_vals:
+            print(f"perf-guard: {metric} missing or non-numeric in "
+                  f"current or baseline rows — skipped")
             continue
         base = statistics.median(base_vals)
         ratio = new / base if base else float("inf")

@@ -288,19 +288,33 @@ def _append_history(bench: str, rec: dict, devices) -> None:
 
 
 def read_history(bench: str = None) -> List[dict]:
-    """All (optionally bench-filtered) history rows, oldest first;
-    malformed lines are skipped rather than poisoning the guard."""
+    """All (optionally bench-filtered) history rows, oldest first.
+
+    The history file is append-only and crash-prone by nature (a killed
+    bench run leaves a truncated last line), so corrupt, truncated or
+    non-object lines are skipped WITH A WARNING instead of poisoning or
+    crashing the regression guard; an empty/absent file is simply no
+    history."""
+    import sys
     rows = []
     if not os.path.exists(HISTORY):
         return rows
     with open(HISTORY) as f:
-        for line in f:
+        for lineno, line in enumerate(f, 1):
             line = line.strip()
             if not line:
                 continue
             try:
                 row = json.loads(line)
             except ValueError:
+                print(f"warning: {HISTORY}:{lineno}: skipping "
+                      f"malformed history line (truncated or corrupt "
+                      f"JSON)", file=sys.stderr)
+                continue
+            if not isinstance(row, dict):
+                print(f"warning: {HISTORY}:{lineno}: skipping "
+                      f"non-object history row "
+                      f"({type(row).__name__})", file=sys.stderr)
                 continue
             if bench is None or row.get("bench") == bench:
                 rows.append(row)
@@ -444,6 +458,121 @@ def mega_sweep(emit_json: bool = True) -> List[str]:
             f" cache_hit={cache['hit']}"]
 
 
+# grid for the campaign_sweep bench: big enough for ~6 shards but small
+# enough that the fault-tolerance drill (straight + campaign + kill +
+# resume = ~2.5 sweeps) stays a minutes-not-hours lane; scale with
+# CAMPAIGN_SWEEP_GRIDS_JSON
+_CAMPAIGN_GRIDS = {
+    "frame_rate": [15., 30., 60., 90., 120., 240.],
+    "sys_rows": [4., 8., 16., 32., 64., 128.],
+    "sys_cols": [8., 16., 32., 64.],
+    "active_fraction_scale": [0.1, 0.25, 0.5, 1.0],
+    "pixel_pitch_um": [2., 3., 4., 5., 6.],
+}
+
+
+def campaign_sweep(emit_json: bool = True) -> List[str]:
+    """Fault-tolerant campaign overhead + kill/resume drill.
+
+    Runs the same fused sweep three ways — straight ``explore()``, a
+    checkpointed campaign, and a campaign killed mid-run (injected
+    transient fault + simulated SIGKILL) then resumed — asserting
+    bit-identical top-k across all three and recording the campaign's
+    manifest/checkpoint overhead into BENCH_history.jsonl.  The campaign
+    directory (manifest + shard checkpoints + report) is left under
+    ``benchmarks/results/campaign_demo`` for CI artifact upload.
+    """
+    import shutil
+    from repro.campaign import (CampaignOptions, FaultSchedule,
+                                KillCampaign, TransientFault, resume,
+                                run_campaign)
+    from repro.core.shard_sweep import stream_cache_clear, stream_cache_info
+    from repro.explore import DesignSpace, explore
+
+    grids = json.loads(os.environ.get("CAMPAIGN_SWEEP_GRIDS_JSON",
+                                      json.dumps(_CAMPAIGN_GRIDS)))
+    space = DesignSpace(["edgaze"], grids)
+    chunk = int(os.environ.get("CAMPAIGN_SWEEP_CHUNK", 1 << 12))
+    shard_points = int(os.environ.get("CAMPAIGN_SWEEP_SHARD_POINTS",
+                                      1 << 12))
+    camp_dir = os.path.join(RESULTS, "campaign_demo")
+    shutil.rmtree(camp_dir, ignore_errors=True)
+
+    # superchunk pinned to the campaign runner's fixed scan length so
+    # straight, campaign, drill and resume all ride ONE step executable
+    # (asserted below) and the overhead comparison is warm-vs-warm
+    stream_cache_clear()
+    explore(space, engine="fused", chunk_size=chunk, k=8,
+            superchunk=16)                                  # warm compile
+    t0 = time.perf_counter()
+    straight = explore(space, engine="fused", chunk_size=chunk, k=8,
+                       superchunk=16)
+    straight_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    camp = run_campaign(space, camp_dir, k=8, engine="fused",
+                        chunk_size=chunk,
+                        options=CampaignOptions(shard_points=shard_points))
+    campaign_s = time.perf_counter() - t0
+    n_shards = camp.campaign["n_planned"]
+
+    # kill/resume drill: one transient fault (retried), then SIGKILL
+    # after half the shards; resume must re-dispatch ONLY the rest
+    drill_dir = os.path.join(RESULTS, "campaign_drill")
+    shutil.rmtree(drill_dir, ignore_errors=True)
+    faults = FaultSchedule({(0, 1): TransientFault("injected flake")},
+                           kill_after=max(1, n_shards // 2))
+    killed = False
+    try:
+        run_campaign(space, drill_dir, k=8, engine="fused",
+                     chunk_size=chunk,
+                     options=CampaignOptions(shard_points=shard_points,
+                                             faults=faults,
+                                             sleep=lambda s: None))
+    except KillCampaign:
+        killed = True
+    t0 = time.perf_counter()
+    resumed = resume(drill_dir)
+    resume_s = time.perf_counter() - t0
+    shutil.rmtree(drill_dir, ignore_errors=True)
+
+    def _key(res):
+        return [(round(r["total_j"], 15), r["variant"], r["index"])
+                for r in res.topk]
+    parity = (_key(straight) == _key(camp) == _key(resumed)
+              and not camp.campaign["partial"]
+              and not resumed.campaign["partial"])
+    assert parity, "campaign/resume top-k diverged from straight explore"
+    assert killed, "kill drill never fired"
+    assert stream_cache_info()["step_compiles"] == 1, \
+        "campaign lanes must share one step executable"
+    overhead = campaign_s / straight_s - 1.0 if straight_s else 0.0
+    rec = {"campaign_n_points": camp.n_points,
+           "campaign_n_shards": n_shards,
+           "campaign_straight_s": round(straight_s, 4),
+           "campaign_wall_s": round(campaign_s, 4),
+           "campaign_overhead_frac": round(overhead, 4),
+           "campaign_points_per_sec": round(camp.n_points
+                                            / max(campaign_s, 1e-12)),
+           "campaign_resume_executed": resumed.campaign["n_executed"],
+           "campaign_resume_loaded": resumed.campaign["n_loaded"],
+           "campaign_resume_s": round(resume_s, 4),
+           "campaign_step_compiles": stream_cache_info()["step_compiles"],
+           "campaign_parity": parity}
+    if emit_json:
+        _update_bench_json(rec)
+        import jax
+        _append_history("campaign_sweep", rec,
+                        devices=jax.local_device_count())
+    return [f"campaign_sweep,{campaign_s*1e6:.0f},"
+            f"points={camp.n_points} shards={n_shards}"
+            f" overhead={overhead:+.1%}"
+            f" resume_loaded={rec['campaign_resume_loaded']}"
+            f" resume_executed={rec['campaign_resume_executed']}"
+            f" executables={rec['campaign_step_compiles']}"
+            f" parity={parity}"]
+
+
 def roofline_table() -> List[str]:
     """§Roofline summary from the dry-run results (if present)."""
     path = os.path.join(RESULTS, "dryrun.json")
@@ -467,7 +596,7 @@ def roofline_table() -> List[str]:
 
 BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
            fig12_stage_breakdown, kernel_microbench, design_sweep,
-           mega_sweep, roofline_table]
+           mega_sweep, campaign_sweep, roofline_table]
 
 
 def main(argv: List[str] = None) -> None:

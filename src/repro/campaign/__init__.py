@@ -1,0 +1,27 @@
+"""Durable, fault-tolerant sweep campaigns (manifest / retry / resume).
+
+``run_campaign(space, checkpoint_dir)`` shards a design-space sweep
+into checkpointed ``index_range`` units with bounded retry, OOM
+splitting and quarantine; ``resume(manifest_path)`` re-dispatches only
+what's missing.  See :mod:`repro.campaign.runner` for the execution
+model and :mod:`repro.campaign.manifest` for the on-disk schema.
+"""
+from .faults import (CampaignFault, DeterministicFault, FaultSchedule,
+                     KillCampaign, OOMFault, ShardTimeout, TransientFault,
+                     classify_failure)
+from .manifest import (CampaignIntegrityError, CampaignManifest,
+                       CampaignMismatchError, bank_signature,
+                       completed_shards, missing_ranges, plan_shards,
+                       read_shard, space_signature, write_shard)
+from .merge import merge_stream_results, merged_coverage
+from .runner import CampaignOptions, resume, run_campaign
+
+__all__ = [
+    "CampaignFault", "CampaignIntegrityError", "CampaignManifest",
+    "CampaignMismatchError", "CampaignOptions", "DeterministicFault",
+    "FaultSchedule", "KillCampaign", "OOMFault", "ShardTimeout",
+    "TransientFault", "bank_signature", "classify_failure",
+    "completed_shards", "merge_stream_results", "merged_coverage",
+    "missing_ranges", "plan_shards", "read_shard", "resume",
+    "run_campaign", "space_signature", "write_shard",
+]

@@ -1,0 +1,269 @@
+"""The campaign runner: durable, fault-tolerant mega-sweep execution.
+
+``run_campaign(space, checkpoint_dir)`` turns one ``explore()`` call
+into a campaign that survives process death:
+
+1. **Plan** — on first run, a :class:`CampaignManifest` records the
+   resolved design-space + plan-bank signatures, provenance (git SHA,
+   jax/device fingerprint) and a deterministic split of the flat index
+   space into ``index_range`` shards.  On a later run against the same
+   directory, the manifest is verified against the provided space and
+   only the not-yet-completed ranges are dispatched.
+2. **Execute** — each shard runs ``explore(space, index_range=(lo, hi),
+   engine='fused')`` with a FIXED ``superchunk``, so every shard (and
+   every OOM half-shard) shares ONE step executable for the whole
+   campaign.  Failures are classified (:func:`classify_failure`):
+   transient -> bounded retry with exponential backoff; OOM -> split the
+   shard in half and retry the halves; deterministic -> quarantine and
+   continue.  A completed shard's O(k + V) ``StreamResult`` payload is
+   checkpointed atomically (tmp + fsync + rename, checksummed) before
+   the next shard starts, so a kill loses at most one shard of work.
+3. **Merge** — checkpointed + freshly-computed shard results fold
+   through :func:`merge_stream_results` into one result bit-compatible
+   (rel 1e-6) with the unsharded sweep, and a ``report.json`` records
+   what ran, retried, split and quarantined.
+
+``resume(manifest_path)`` rebuilds the space from the manifest payload
+and re-enters the same machinery — it dispatches ONLY the missing
+ranges.  Both entry points refuse (``CampaignMismatchError``) when the
+space or bank layout no longer matches the manifest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..ckpt import atomic_write_json
+from ..core.shard_sweep import _DEFAULT_SUPERCHUNK, StreamResult
+from .faults import FaultSchedule, ShardTimeout, classify_failure
+from .manifest import (REPORT_NAME, CampaignIntegrityError,
+                       CampaignManifest, completed_shards, missing_ranges,
+                       read_shard, shard_path, write_shard)
+from .merge import merge_stream_results, merged_coverage
+
+_DEFAULT_CHUNK = 1 << 18
+
+
+@dataclasses.dataclass
+class CampaignOptions:
+    """Fault-handling knobs for :func:`run_campaign`.
+
+    ``shard_points`` sets the planned shard width (default: four chunks,
+    so a shard is a handful of dispatches); ``max_retries`` bounds
+    attempts per shard for transient failures, backed off exponentially
+    from ``backoff_s``; ``timeout_s`` aborts a shard dispatch that runs
+    too long (classified transient); OOM splits recurse down to
+    ``min_shard_points`` before quarantining.  ``faults`` injects a
+    deterministic :class:`FaultSchedule` at shard boundaries (tests /
+    drills); ``sleep`` is injectable so backoff is testable without
+    wall-clock waits.
+    """
+    shard_points: Optional[int] = None
+    max_retries: int = 3
+    backoff_s: float = 0.5
+    timeout_s: Optional[float] = None
+    min_shard_points: int = 1
+    faults: Optional[FaultSchedule] = None
+    sleep: Callable[[float], None] = time.sleep
+
+
+def _dispatch(space, lo: int, hi: int, sweep: Dict, mesh,
+              timeout_s: Optional[float]) -> StreamResult:
+    """Run one shard's sweep, optionally under a wall-clock budget."""
+    from ..explore import explore
+
+    def run() -> StreamResult:
+        res = explore(space, k=int(sweep["k"]), metric=sweep["metric"],
+                      engine=sweep["engine"],
+                      chunk_size=int(sweep["chunk_size"]), mesh=mesh,
+                      block_points=int(sweep["block_points"]),
+                      index_range=(lo, hi),
+                      superchunk=int(sweep["superchunk"]))
+        return res.stream_result
+
+    if timeout_s is None:
+        return run()
+    import concurrent.futures
+    pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+    try:
+        fut = pool.submit(run)
+        try:
+            return fut.result(timeout=timeout_s)
+        except concurrent.futures.TimeoutError:
+            raise ShardTimeout(
+                f"shard [{lo}, {hi}) exceeded timeout_s={timeout_s}"
+            ) from None
+    finally:
+        pool.shutdown(wait=timeout_s is None)
+
+
+def _quarantine(directory: str, lo: int, hi: int, *, kind: str,
+                error: str, attempts: int) -> Dict:
+    entry = {"lo": int(lo), "hi": int(hi), "kind": kind,
+             "error": error, "attempts": int(attempts)}
+    atomic_write_json(shard_path(directory, lo, hi, quarantined=True),
+                      entry)
+    return entry
+
+
+def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
+                 metric: str = "total_j", engine: str = "fused",
+                 chunk_size: Optional[int] = None,
+                 superchunk: Optional[int] = None,
+                 block_points: int = 4096, mesh=None,
+                 options: Optional[CampaignOptions] = None,
+                 on_corrupt: str = "refuse"):
+    """Run (or resume) a durable sharded sweep campaign.
+
+    Returns the same :class:`~repro.explore.api.ExploreResult` an
+    unsharded ``explore()`` call would, with the campaign report on
+    ``result.campaign``.  Idempotent against ``checkpoint_dir``: a
+    directory holding a finished campaign verifies + merges without
+    dispatching anything; a partial one dispatches only the missing
+    index ranges.  Sweep parameters (``k``/``metric``/``engine``/...)
+    are recorded in the manifest on first run and REUSED on resume —
+    changing them mid-campaign would make shards unmergeable.
+
+    ``on_corrupt``: ``'refuse'`` (default) raises
+    :class:`CampaignIntegrityError` on a checksum-failing shard file;
+    ``'redispatch'`` discards it and re-runs that range.
+    """
+    from ..explore.api import _stream_to_explore
+    if on_corrupt not in ("refuse", "redispatch"):
+        raise ValueError(f"on_corrupt must be 'refuse' or 'redispatch', "
+                         f"got {on_corrupt!r}")
+    opts = options or CampaignOptions()
+    t0 = time.perf_counter()
+
+    # ----- plan: create or verify the manifest ----------------------------
+    resumed = os.path.exists(os.path.join(checkpoint_dir, "manifest.json"))
+    if resumed:
+        manifest = CampaignManifest.load(checkpoint_dir)
+        manifest.verify_space(space)
+        manifest.verify_bank(space)
+        sweep = manifest.sweep
+    else:
+        if engine == "auto":
+            engine = "fused"
+        if engine not in ("fused", "staged"):
+            raise ValueError(f"campaigns need a streaming engine ('fused' "
+                             f"or 'staged'), got {engine!r}")
+        chunk = int(chunk_size or _DEFAULT_CHUNK)
+        sweep = {"k": int(k), "metric": metric, "engine": engine,
+                 "chunk_size": chunk,
+                 # FIXED scan length: the default would shrink with the
+                 # shard's chunk count and each distinct s_len is a new
+                 # executable — pinning it keeps the whole campaign
+                 # (including OOM half-shards) on ONE step executable
+                 "superchunk": int(superchunk or _DEFAULT_SUPERCHUNK),
+                 "block_points": int(block_points)}
+        shard_points = int(opts.shard_points or 4 * chunk)
+        manifest = CampaignManifest.create(space, sweep=sweep,
+                                           shard_points=shard_points)
+        manifest.save(checkpoint_dir)
+
+    # ----- load completed shards (verified), derive the work queue --------
+    results: List[StreamResult] = []
+    loaded: List[Tuple[int, int]] = []
+    for (lo, hi), path in sorted(completed_shards(checkpoint_dir).items()):
+        try:
+            payload = read_shard(path)
+        except CampaignIntegrityError:
+            if on_corrupt == "refuse":
+                raise
+            os.remove(path)            # redispatch: range back to queue
+            continue
+        results.append(StreamResult.from_payload(payload["result"]))
+        loaded.append((lo, hi))
+    queue = deque((lo, hi, 1, 0) for lo, hi in
+                  missing_ranges(manifest.shards, loaded))
+
+    # ----- execute --------------------------------------------------------
+    executed: List[Dict] = []
+    quarantined: List[Dict] = []
+    n_retries = n_splits = n_completed = 0
+    while queue:
+        lo, hi, attempt, splits = queue.popleft()
+        try:
+            if opts.faults is not None:
+                opts.faults.check(lo, hi, attempt,
+                                  n_completed=n_completed)
+            st = _dispatch(space, lo, hi, sweep, mesh, opts.timeout_s)
+        except BaseException as exc:  # noqa: BLE001 - classified below
+            kind = classify_failure(exc)
+            executed.append({"lo": lo, "hi": hi, "attempt": attempt,
+                             "status": "fault", "kind": kind,
+                             "error": str(exc)})
+            if kind == "kill":
+                raise                   # simulated SIGKILL: no cleanup
+            if kind == "oom" and hi - lo >= max(
+                    2, 2 * max(int(opts.min_shard_points), 1)):
+                mid = lo + (hi - lo) // 2
+                n_splits += 1
+                queue.appendleft((mid, hi, 1, splits + 1))
+                queue.appendleft((lo, mid, 1, splits + 1))
+            elif kind == "transient" and attempt < int(opts.max_retries):
+                n_retries += 1
+                opts.sleep(float(opts.backoff_s) * 2 ** (attempt - 1))
+                queue.appendleft((lo, hi, attempt + 1, splits))
+            else:
+                quarantined.append(_quarantine(
+                    checkpoint_dir, lo, hi, kind=kind, error=str(exc),
+                    attempts=attempt))
+            continue
+        write_shard(checkpoint_dir, lo, hi, st.to_payload(),
+                    attempts=attempt, splits=splits)
+        qpath = shard_path(checkpoint_dir, lo, hi, quarantined=True)
+        if os.path.exists(qpath):       # range recovered on a later run
+            os.remove(qpath)
+        results.append(st)
+        executed.append({"lo": lo, "hi": hi, "attempt": attempt,
+                         "status": "ok"})
+        n_completed += 1
+
+    # ----- merge + report -------------------------------------------------
+    if not results:
+        raise RuntimeError(
+            f"campaign produced no completed shards — all "
+            f"{len(quarantined)} dispatched ranges quarantined; see "
+            f"{os.path.join(checkpoint_dir, 'quarantine')} for errors")
+    merged = merge_stream_results(results, k=int(sweep["k"]))
+    coverage = merged_coverage(results)
+    missing = missing_ranges(manifest.shards, coverage)
+    report = {
+        "schema": 1, "resumed": resumed,
+        "n_planned": len(manifest.shards),
+        "n_loaded": len(loaded), "n_executed": len(executed),
+        "n_completed": len(results), "n_retries": n_retries,
+        "n_splits": n_splits, "executed": executed,
+        "quarantined": quarantined,
+        "coverage": [[lo, hi] for lo, hi in coverage],
+        "missing": [[lo, hi] for lo, hi in missing],
+        "partial": bool(missing), "wall_s": time.perf_counter() - t0,
+    }
+    atomic_write_json(os.path.join(checkpoint_dir, REPORT_NAME), report)
+    return _stream_to_explore(space, merged, campaign=report)
+
+
+def resume(manifest_path: str, *, space=None, mesh=None,
+           options: Optional[CampaignOptions] = None,
+           on_corrupt: str = "refuse"):
+    """Resume a campaign from its manifest (path or directory).
+
+    Rebuilds the :class:`DesignSpace` from the manifest payload when
+    ``space`` is not given, verifies signatures, re-dispatches ONLY the
+    index ranges without a verified shard checkpoint, and returns the
+    merged result.  Raises :class:`CampaignMismatchError` when the
+    current code resolves the space or plan-bank layout differently
+    from the manifest.
+    """
+    directory = (manifest_path if os.path.isdir(manifest_path)
+                 else os.path.dirname(os.path.abspath(manifest_path)))
+    manifest = CampaignManifest.load(manifest_path)
+    if space is None:
+        space = manifest.rebuild_space()
+    return run_campaign(space, directory, mesh=mesh, options=options,
+                        on_corrupt=on_corrupt)

@@ -1,4 +1,6 @@
 """Fault-tolerant checkpointing."""
-from .manager import CheckpointManager, restore_resharded
+from .manager import (CheckpointManager, atomic_write_json, canonical_json,
+                      payload_checksum, read_json, restore_resharded)
 
-__all__ = ["CheckpointManager", "restore_resharded"]
+__all__ = ["CheckpointManager", "atomic_write_json", "canonical_json",
+           "payload_checksum", "read_json", "restore_resharded"]

@@ -13,6 +13,7 @@ new NamedShardings — growing or shrinking the data axis between runs.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -21,6 +22,44 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Atomic small-record JSON I/O (shared with repro.campaign shard stores)
+# ---------------------------------------------------------------------------
+def canonical_json(obj: Any) -> str:
+    """Canonical (sorted-key, minimal-separator) JSON — the checksum and
+    content-comparison form.  ``repr``-round-trip floats, so a payload
+    survives write -> read -> re-checksum bit-exactly."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      allow_nan=True)
+
+
+def payload_checksum(obj: Any) -> str:
+    """sha256 over the canonical JSON form of ``obj``."""
+    return hashlib.sha256(canonical_json(obj).encode()).hexdigest()
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: int = 1) -> str:
+    """Write ``obj`` as JSON via tmp-file + fsync + rename.
+
+    Same publish discipline as checkpoint directories: a reader never
+    observes a half-written file, and a writer killed mid-write leaves
+    only a ``.tmp`` turd the next writer overwrites.
+    """
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=indent)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)          # atomic publish
+    return path
+
+
+def read_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:

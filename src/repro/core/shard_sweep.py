@@ -194,8 +194,32 @@ def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
 #: evict the stalest executable instead of growing without bound.
 _STREAM_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _STREAM_STATS = {"step_compiles": 0, "hits": 0, "evictions": 0}
-_STREAM_CACHE_LIMIT = max(1, int(os.environ.get("REPRO_STREAM_CACHE_LIMIT",
-                                                "16")))
+
+
+def _coerce_cache_limit(value, source: str) -> int:
+    """Validate a cache-limit setting: an integer >= 1, rejected loudly.
+
+    ``source`` names where the value came from so the error points the
+    user at the right knob (the env var or the setter argument).
+    """
+    if isinstance(value, bool) or not isinstance(value, (int, str)):
+        raise TypeError(f"{source} must be an integer >= 1, got "
+                        f"{type(value).__name__} {value!r}")
+    try:
+        limit = int(value)
+    except ValueError:
+        raise ValueError(f"{source} must be an integer >= 1, got "
+                         f"{value!r}") from None
+    if limit < 1:
+        raise ValueError(f"{source} must be >= 1 (a zero/negative limit "
+                         f"would disable executable caching entirely), "
+                         f"got {limit}")
+    return limit
+
+
+_STREAM_CACHE_LIMIT = _coerce_cache_limit(
+    os.environ.get("REPRO_STREAM_CACHE_LIMIT", "16"),
+    "REPRO_STREAM_CACHE_LIMIT")
 _EXTRA_CACHES.append(_STREAM_CACHE)     # flushed by lower_cache_clear()
 
 
@@ -216,7 +240,8 @@ def set_stream_cache_limit(limit: int) -> int:
     """Set the LRU capacity of the step-executable cache; returns the
     previous limit.  Shrinking evicts stalest entries immediately."""
     global _STREAM_CACHE_LIMIT
-    old, _STREAM_CACHE_LIMIT = _STREAM_CACHE_LIMIT, max(1, int(limit))
+    limit = _coerce_cache_limit(limit, "set_stream_cache_limit()")
+    old, _STREAM_CACHE_LIMIT = _STREAM_CACHE_LIMIT, limit
     while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
         _STREAM_CACHE.popitem(last=False)
         _STREAM_STATS["evictions"] += 1
@@ -237,6 +262,40 @@ def _cache_put(key, entry) -> None:
     while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
         _STREAM_CACHE.popitem(last=False)
         _STREAM_STATS["evictions"] += 1
+
+
+def _validate_index_range(index_range, total: int) -> Tuple[int, int]:
+    """Resolve ``index_range`` against the flat index space ``[0, total)``.
+
+    ``None`` means the whole space.  Bounds must be integers with
+    ``0 <= lo <= hi <= total``; reversed and out-of-bounds ranges are
+    rejected with the valid span in the message (campaign shards and
+    multi-host partitions both feed through here, so a bad split must
+    fail loudly instead of silently sweeping the wrong points).  An
+    empty range (``lo == hi``) is valid and yields a well-formed empty
+    result.
+    """
+    if index_range is None:
+        return 0, int(total)
+    try:
+        lo_raw, hi_raw = index_range
+    except (TypeError, ValueError):
+        raise ValueError(f"index_range must be a (lo, hi) pair, got "
+                         f"{index_range!r}") from None
+    try:
+        lo, hi = int(lo_raw), int(hi_raw)
+    except (TypeError, ValueError):
+        raise ValueError(f"index_range bounds must be integers, got "
+                         f"({lo_raw!r}, {hi_raw!r})") from None
+    if lo > hi:
+        raise ValueError(f"index_range ({lo}, {hi}) is reversed "
+                         f"(lo > hi); valid flat indices span "
+                         f"[0, {total}) with lo <= hi")
+    if lo < 0 or hi > total:
+        raise ValueError(f"index_range ({lo}, {hi}) outside the flat "
+                         f"index space; valid flat indices span "
+                         f"[0, {total}) with 0 <= lo <= hi <= {total}")
+    return lo, hi
 
 
 def _init_banked_state(k: int, n_out: int, n_variants: int, idx_dtype,
@@ -590,6 +649,26 @@ class StreamResult:
     dispatches: int = 0
     superchunk: int = 1
     occupancy: float = 1.0
+    n_var: int = 0          # points per variant (flat = slot*n_var + local)
+
+    def to_payload(self) -> Dict:
+        """JSON-serializable form (the campaign shard-checkpoint body).
+
+        Pure-Python scalars/lists only; ``from_payload`` round-trips it
+        bit-exactly (floats survive via repr round-trip)."""
+        out = dataclasses.asdict(self)
+        out["topk"] = [dict(r) for r in self.topk]
+        out["summaries"] = {
+            label: dict(sm, argmin_point=(dict(sm["argmin_point"])
+                                          if sm["argmin_point"] is not None
+                                          else None))
+            for label, sm in self.summaries.items()}
+        return out
+
+    @classmethod
+    def from_payload(cls, payload: Dict) -> "StreamResult":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in payload.items() if k in fields})
 
     @property
     def points_per_sec(self) -> float:
@@ -726,9 +805,7 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
     # work dispatched on every single chunk of a small-variant sweep
     chunk = -(-max(int(chunk_size), 1) // ndev) * ndev
     chunk = min(chunk, -(-n_var // ndev) * ndev)
-    lo, hi = (0, total) if index_range is None else map(int, index_range)
-    if not 0 <= lo <= hi <= total:
-        raise ValueError(f"index_range {(lo, hi)} outside [0, {total}]")
+    lo, hi = _validate_index_range(index_range, total)
     # int32 must hold start + chunk - 1 BEFORE tail clamping/masking, so
     # the widen decision accounts for the final chunk's overshoot — at
     # total in (2**31 - chunk, 2**31) the tail additions would wrap
@@ -886,4 +963,5 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
         n_variants=n_variants, index_lo=lo, index_hi=hi,
         engine=engine, dispatches=dispatches, superchunk=s_len,
         occupancy=((hi - lo) / dispatched_points if dispatched_points
-                   else 1.0))
+                   else 1.0),
+        n_var=n_var)

@@ -86,6 +86,9 @@ class ExploreResult:
     cache: Dict[str, Dict]
     sweep_results: Optional[Dict[str, SweepResult]] = None
     stream_result: Optional[StreamResult] = None
+    #: campaign report dict (shards executed / retried / quarantined,
+    #: coverage) when the result came from a checkpointed campaign run
+    campaign: Optional[Dict] = None
 
     def __len__(self) -> int:
         return self.n_points
@@ -218,13 +221,31 @@ def _grid_explore(space: DesignSpace, engine: str, *, k, metric,
         sweep_results=sweep_results)
 
 
+def _stream_to_explore(space: DesignSpace, st: StreamResult, *,
+                       wall_s: Optional[float] = None,
+                       campaign: Optional[Dict] = None) -> ExploreResult:
+    """Wrap a (possibly merged) :class:`StreamResult` as the unified
+    :class:`ExploreResult` surface."""
+    return ExploreResult(
+        space=space, engine=st.engine, metric=st.metric, k=st.k,
+        n_points=st.n_points, n_feasible=st.n_feasible,
+        n_variants=st.n_variants, n_devices=st.n_devices,
+        chunk_size=st.chunk_size, topk=st.topk, summaries=st.summaries,
+        wall_s=st.wall_s if wall_s is None else wall_s,
+        compile_s=st.compile_s, eval_s=st.eval_s,
+        dispatches=st.dispatches, superchunk=st.superchunk,
+        occupancy=st.occupancy, cache=_cache_snapshot(),
+        stream_result=st, campaign=campaign)
+
+
 def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
             engine: str = "auto", chunk_size: Optional[int] = None,
             mesh=None, strict: bool = False, block_points: int = 4096,
             progress: Optional[Callable[[int, int], None]] = None,
             index_range: Optional[Tuple[int, int]] = None,
-            pipeline_depth: int = 4,
-            superchunk: Optional[int] = None) -> ExploreResult:
+            pipeline_depth: int = 4, superchunk: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            campaign=None) -> ExploreResult:
     """Score a :class:`DesignSpace`; one entry point for every engine.
 
     ``k`` bounds the top-k winner list, ``metric`` is any model output
@@ -237,6 +258,14 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     scalar oracle.  ``index_range`` / ``progress`` / ``superchunk`` /
     ``pipeline_depth`` / ``block_points`` tune the streaming engines
     (``index_range`` is the multi-host partitioning hook).
+
+    ``checkpoint_dir`` makes the call a durable CAMPAIGN: the sweep is
+    sharded, each shard checkpointed with retry/split/quarantine fault
+    handling, and a killed run resumes from the same directory
+    dispatching only what's missing (see :mod:`repro.campaign`).
+    ``campaign`` optionally passes a
+    :class:`~repro.campaign.CampaignOptions`; the campaign report lands
+    on ``result.campaign``.
     """
     if not isinstance(space, DesignSpace):
         raise TypeError(f"explore() takes a DesignSpace, got "
@@ -245,6 +274,23 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     if metric not in OUT_KEYS:
         raise KeyError(f"unknown metric {metric!r}; valid: "
                        f"{sorted(OUT_KEYS)}")
+    if checkpoint_dir is not None or campaign is not None:
+        if checkpoint_dir is None:
+            raise ValueError("campaign= options require checkpoint_dir= "
+                             "(the campaign's durable state directory)")
+        for name, val in (("strict", strict or None),
+                          ("index_range", index_range),
+                          ("progress", progress)):
+            if val is not None:
+                raise ValueError(f"{name}= is incompatible with "
+                                 f"checkpoint_dir= (the campaign plans "
+                                 f"its own shard index ranges)")
+        from ..campaign import run_campaign
+        return run_campaign(space, checkpoint_dir, k=k, metric=metric,
+                            engine=engine, chunk_size=chunk_size,
+                            superchunk=superchunk,
+                            block_points=block_points, mesh=mesh,
+                            options=campaign)
     engine = _resolve_engine(engine, space, chunk_size, index_range)
 
     if engine in ("monolithic", "chunked"):
@@ -271,12 +317,5 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
         mesh=mesh, block_points=block_points, progress=progress,
         index_range=index_range, pipeline_depth=pipeline_depth,
         engine=engine, superchunk=superchunk)
-    return ExploreResult(
-        space=space, engine=engine, metric=metric, k=k,
-        n_points=st.n_points, n_feasible=st.n_feasible,
-        n_variants=st.n_variants, n_devices=st.n_devices,
-        chunk_size=st.chunk_size, topk=st.topk, summaries=st.summaries,
-        wall_s=time.perf_counter() - t0, compile_s=st.compile_s,
-        eval_s=st.eval_s, dispatches=st.dispatches,
-        superchunk=st.superchunk, occupancy=st.occupancy,
-        cache=_cache_snapshot(), stream_result=st)
+    return _stream_to_explore(space, st,
+                              wall_s=time.perf_counter() - t0)

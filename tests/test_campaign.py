@@ -1,0 +1,446 @@
+"""ISSUE 6: fault-tolerant sweep campaigns (manifest / retry / resume).
+
+Contract pillars:
+
+* a campaign (sharded, checkpointed) run equals the straight fused run
+  AND the monolithic oracle at rel 1e-6, through ONE step executable;
+* the StreamResult merge algebra is partition-independent: merging ANY
+  disjoint shard split (hypothesis: random cuts incl. single-point and
+  variant-straddling shards) equals the unsharded sweep;
+* every failure path is deterministic and tested: transient retry with
+  exponential backoff, retries-exhausted quarantine, OOM shard
+  splitting (down to quarantine at min width), deterministic-failure
+  quarantine with a partial-result report, simulated SIGKILL;
+* resume re-dispatches ONLY missing index ranges (asserted via the
+  report's dispatch log) and refuses on DesignSpace/bank signature
+  mismatch or shard checksum corruption (with an on_corrupt escape);
+* satellite validation: ``index_range`` boundary errors name the valid
+  span, empty ranges produce well-formed empty results, and the stream
+  cache limit rejects non-integer/negative inputs.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (CampaignIntegrityError, CampaignMismatchError,
+                            CampaignOptions, DeterministicFault,
+                            FaultSchedule, KillCampaign, OOMFault,
+                            ShardTimeout, TransientFault, classify_failure,
+                            merge_stream_results, missing_ranges,
+                            plan_shards, resume, run_campaign)
+from repro.campaign.manifest import read_shard, shard_path
+from repro.core.shard_sweep import (StreamResult, _coerce_cache_limit,
+                                    set_stream_cache_limit,
+                                    stream_cache_clear, stream_cache_info)
+from repro.explore import DesignSpace, explore
+from repro.launch.mesh import make_batch_mesh
+
+REL = 1e-6
+
+GRIDS = {"variant": ["2d_in", "3d_in"],
+         "frame_rate": [15.0, 30.0, 60.0],
+         "sys_rows": [8.0, 32.0],
+         "vdd_scale": [0.9, 1.0, 1.1]}
+
+#: shared sweep shape: every campaign in this module (and the straight
+#: reference) rides the same (chunk, superchunk, k) step executable
+CHUNK, K, SUPER = 4, 6, 16
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_batch_mesh(1)          # device-count pinned
+
+
+@pytest.fixture(scope="module")
+def space():
+    return DesignSpace(["edgaze"], GRIDS)
+
+
+@pytest.fixture(scope="module")
+def straight(space, mesh):
+    return explore(space, engine="fused", chunk_size=CHUNK, k=K,
+                   superchunk=SUPER, mesh=mesh)
+
+
+def _opts(**kw):
+    kw.setdefault("shard_points", 7)   # straddles variant boundaries
+    kw.setdefault("sleep", lambda _s: None)
+    return CampaignOptions(**kw)
+
+
+def _campaign(space, d, mesh, **kw):
+    return run_campaign(space, str(d), k=K, engine="fused",
+                        chunk_size=CHUNK, mesh=mesh, options=_opts(**kw))
+
+
+def _assert_equal(a, b, *, rtol=REL):
+    """topk / summaries / count parity between two explore results."""
+    assert a.n_points == b.n_points
+    assert a.n_feasible == b.n_feasible
+    assert ([(r["variant"], r["index"]) for r in a.topk]
+            == [(r["variant"], r["index"]) for r in b.topk])
+    np.testing.assert_allclose([r[a.metric] for r in a.topk],
+                               [r[b.metric] for r in b.topk], rtol=rtol)
+    assert list(a.summaries) == list(b.summaries)
+    for label, sa in a.summaries.items():
+        sb = b.summaries[label]
+        assert sa["n"] == sb["n"] and sa["n_feasible"] == sb["n_feasible"]
+        for key in ("metric_min", "metric_mean"):
+            if np.isnan(sa[key]) or np.isnan(sb[key]):
+                assert np.isnan(sa[key]) and np.isnan(sb[key])
+            else:
+                np.testing.assert_allclose(sa[key], sb[key], rtol=1e-5,
+                                           err_msg=f"{label}.{key}")
+
+
+# ---------------------------------------------------------------------------
+# campaign == straight == monolithic, one executable, durable artifacts
+# ---------------------------------------------------------------------------
+def test_campaign_matches_straight_and_monolithic(space, straight, mesh,
+                                                  tmp_path):
+    stream_cache_clear()
+    res = _campaign(space, tmp_path, mesh)
+    assert stream_cache_info()["step_compiles"] == 1, \
+        "all campaign shards must share ONE step executable"
+    _assert_equal(res, straight)
+    mono = explore(space, engine="monolithic", k=K)
+    np.testing.assert_allclose([r[res.metric] for r in res.topk],
+                               [r[mono.metric] for r in mono.topk],
+                               rtol=REL)
+    # durable artifacts: manifest + checksummed shard files + report
+    assert (tmp_path / "manifest.json").exists()
+    assert (tmp_path / "report.json").exists()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["schema"] == 1 and man["n_points"] == space.n_points
+    assert [tuple((s["lo"], s["hi"])) for s in man["shards"]] \
+        == plan_shards(space.n_points, 7)
+    for s in man["shards"]:
+        payload = read_shard(shard_path(str(tmp_path), s["lo"], s["hi"]))
+        assert payload["shard"]["lo"] == s["lo"]
+        assert payload["result"]["n_points"] == s["hi"] - s["lo"]
+    assert res.campaign["n_executed"] == len(man["shards"])
+    assert not res.campaign["partial"]
+
+
+def test_campaign_staged_engine(space, straight, mesh, tmp_path):
+    res = run_campaign(space, str(tmp_path), k=K, engine="staged",
+                       chunk_size=CHUNK, mesh=mesh, options=_opts())
+    _assert_equal(res, straight)
+
+
+def test_explore_checkpoint_dir_entry(space, straight, mesh, tmp_path):
+    res = explore(space, engine="fused", chunk_size=CHUNK, k=K, mesh=mesh,
+                  checkpoint_dir=str(tmp_path), campaign=_opts())
+    _assert_equal(res, straight)
+    # idempotent: a finished campaign re-verifies and merges, 0 dispatches
+    again = explore(space, chunk_size=CHUNK, k=K, mesh=mesh,
+                    checkpoint_dir=str(tmp_path))
+    assert again.campaign["n_executed"] == 0
+    assert again.campaign["resumed"] is True
+    _assert_equal(again, straight)
+    with pytest.raises(ValueError, match="require checkpoint_dir"):
+        explore(space, campaign=_opts())
+    with pytest.raises(ValueError, match="incompatible with"):
+        explore(space, checkpoint_dir=str(tmp_path), index_range=(0, 5))
+
+
+# ---------------------------------------------------------------------------
+# merge algebra: any disjoint partition == the unsharded sweep
+# ---------------------------------------------------------------------------
+def _shard_results(space, cuts, mesh):
+    bounds = [0] + sorted(cuts) + [space.n_points]
+    out = []
+    for lo, hi in zip(bounds, bounds[1:]):
+        res = explore(space, engine="fused", chunk_size=CHUNK, k=K,
+                      superchunk=SUPER, mesh=mesh, index_range=(lo, hi))
+        out.append(res.stream_result)
+    return out
+
+
+def test_merge_fixed_partitions(space, straight, mesh):
+    n_var = space.n_var
+    for cuts in ([], [1], [n_var], [n_var - 1, n_var + 1],
+                 [1, 2, 3, n_var, space.n_points - 1]):
+        shards = _shard_results(space, cuts, mesh)
+        merged = merge_stream_results(shards, k=K)
+        _assert_equal(merged, straight.stream_result)
+        assert merged.n_var == n_var
+
+
+def test_merge_partition_property(space, straight, mesh):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=8, deadline=None)
+    @hyp.given(st.lists(st.integers(1, space.n_points - 1),
+                        unique=True, max_size=6))
+    def prop(cuts):
+        shards = _shard_results(space, cuts, mesh)
+        np.random.default_rng(len(cuts)).shuffle(shards)  # order-free
+        merged = merge_stream_results(shards, k=K)
+        _assert_equal(merged, straight.stream_result)
+
+    prop()
+
+
+def test_merge_rejects_overlap_and_empty():
+    with pytest.raises(ValueError, match="at least one shard"):
+        merge_stream_results([])
+    mk = lambda lo, hi: StreamResult(             # noqa: E731
+        algorithm="a", metric="total_j", k=1, n_points=hi - lo,
+        n_feasible=0, n_devices=1, chunk_size=1, topk=[], summaries={},
+        index_lo=lo, index_hi=hi, n_var=10)
+    with pytest.raises(ValueError, match="overlap"):
+        merge_stream_results([mk(0, 5), mk(4, 8)])
+
+
+def test_stream_result_payload_roundtrip(straight):
+    st = straight.stream_result
+    payload = json.loads(json.dumps(st.to_payload()))
+    back = StreamResult.from_payload(payload)
+    assert dataclasses.asdict(back) == dataclasses.asdict(st)
+
+
+# ---------------------------------------------------------------------------
+# failure paths (all deterministic)
+# ---------------------------------------------------------------------------
+def test_transient_retry_exponential_backoff(space, straight, mesh,
+                                             tmp_path):
+    sleeps = []
+    faults = FaultSchedule({(0, 1): TransientFault("flake"),
+                            (0, 2): TransientFault("flake")})
+    res = _campaign(space, tmp_path, mesh, faults=faults, backoff_s=0.25,
+                    sleep=sleeps.append)
+    assert sleeps == [0.25, 0.5], "backoff must double per attempt"
+    assert res.campaign["n_retries"] == 2
+    assert not res.campaign["partial"]
+    _assert_equal(res, straight)
+
+
+def test_retries_exhausted_quarantines(space, mesh, tmp_path):
+    faults = FaultSchedule({(0, a): TransientFault("still down")
+                            for a in (1, 2, 3)})
+    res = _campaign(space, tmp_path, mesh, faults=faults, max_retries=3)
+    assert res.campaign["partial"]
+    assert res.campaign["missing"] == [[0, 7]]
+    (q,) = res.campaign["quarantined"]
+    assert q["kind"] == "transient" and q["attempts"] == 3
+    assert os.path.exists(shard_path(str(tmp_path), 0, 7,
+                                     quarantined=True))
+    assert res.n_points == space.n_points - 7
+
+
+def test_oom_splits_shard_and_recovers(space, straight, mesh, tmp_path):
+    # OOM only at full shard width; both halves then succeed
+    faults = FaultSchedule(
+        {(0, 1): lambda lo, hi, attempt:
+         OOMFault("too big") if hi - lo >= 7 else None})
+    res = _campaign(space, tmp_path, mesh, faults=faults)
+    assert res.campaign["n_splits"] == 1
+    assert not res.campaign["partial"]
+    _assert_equal(res, straight)
+    # the halves checkpointed their own ranges
+    assert os.path.exists(shard_path(str(tmp_path), 0, 3))
+    assert os.path.exists(shard_path(str(tmp_path), 3, 7))
+
+
+def test_oom_recurses_to_quarantine_at_min_width(space, mesh, tmp_path):
+    res = _campaign(space, tmp_path, mesh,
+                    faults=FaultSchedule({(0, 1): OOMFault("always")}))
+    # [0,7) halves until the 1-point shard at lo=0 cannot split further
+    assert res.campaign["partial"]
+    assert res.campaign["missing"] == [[0, 1]]
+    (q,) = res.campaign["quarantined"]
+    assert (q["lo"], q["hi"], q["kind"]) == (0, 1, "oom")
+    assert res.n_points == space.n_points - 1
+
+
+def test_deterministic_fault_quarantines_with_partial_report(
+        space, straight, mesh, tmp_path):
+    faults = FaultSchedule({(7, 1): DeterministicFault("bad shard")})
+    res = _campaign(space, tmp_path, mesh, faults=faults)
+    assert res.campaign["partial"]
+    assert res.campaign["missing"] == [[7, 14]]
+    assert res.campaign["quarantined"][0]["kind"] == "deterministic"
+    # the surviving shards still merge into a well-formed result
+    assert res.n_points == space.n_points - 7
+    assert all(not (7 <= r["index"] < 14) or r["variant"] != "2d_in"
+               for r in res.topk)
+    # ... and a later run re-dispatches ONLY the quarantined range
+    res2 = _campaign(space, tmp_path, mesh)
+    assert [(e["lo"], e["hi"]) for e in res2.campaign["executed"]] \
+        == [(7, 14)]
+    assert not res2.campaign["partial"]
+    _assert_equal(res2, straight)
+    assert not os.path.exists(shard_path(str(tmp_path), 7, 14,
+                                         quarantined=True))
+
+
+def test_kill_and_resume_dispatches_only_missing(space, straight, mesh,
+                                                 tmp_path):
+    with pytest.raises(KillCampaign):
+        _campaign(space, tmp_path, mesh,
+                  faults=FaultSchedule(kill_after=2))
+    done = sorted((s["lo"], s["hi"]) for s in
+                  (json.loads((tmp_path / "shards" / f).read_text())["shard"]
+                   for f in os.listdir(tmp_path / "shards")))
+    assert len(done) == 2, "kill must land after exactly 2 checkpoints"
+    res = resume(str(tmp_path), mesh=mesh)
+    assert res.campaign["resumed"] and res.campaign["n_loaded"] == 2
+    ran = sorted((e["lo"], e["hi"]) for e in res.campaign["executed"])
+    assert ran == missing_ranges(plan_shards(space.n_points, 7), done)
+    assert not res.campaign["partial"]
+    _assert_equal(res, straight)
+
+
+def test_resume_refuses_signature_mismatch(space, mesh, tmp_path):
+    _campaign(space, tmp_path, mesh)
+    other = DesignSpace(["edgaze"], dict(GRIDS, frame_rate=[15.0, 30.0]))
+    with pytest.raises(CampaignMismatchError, match="signature mismatch"):
+        run_campaign(other, str(tmp_path), mesh=mesh)
+    # tampered bank signature: same space, manifest claims another layout
+    man_path = tmp_path / "manifest.json"
+    man = json.loads(man_path.read_text())
+    man["bank_signature"] = "0" * 64
+    man_path.write_text(json.dumps(man))
+    with pytest.raises(CampaignMismatchError, match="PlanBank layout"):
+        run_campaign(space, str(tmp_path), mesh=mesh)
+
+
+def test_corrupt_shard_refused_then_redispatched(space, straight, mesh,
+                                                 tmp_path):
+    _campaign(space, tmp_path, mesh)
+    path = shard_path(str(tmp_path), 0, 7)
+    payload = json.loads(open(path).read())
+    payload["result"]["n_feasible"] += 1       # bit-flip, checksum stale
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    with pytest.raises(CampaignIntegrityError, match="checksum"):
+        run_campaign(space, str(tmp_path), mesh=mesh)
+    res = run_campaign(space, str(tmp_path), mesh=mesh,
+                       on_corrupt="redispatch")
+    assert [(e["lo"], e["hi"]) for e in res.campaign["executed"]] \
+        == [(0, 7)]
+    _assert_equal(res, straight)
+
+
+def test_campaign_all_quarantined_raises(space, mesh, tmp_path):
+    faults = FaultSchedule(
+        {(lo, 1): DeterministicFault("no")
+         for lo, _hi in plan_shards(space.n_points, 7)})
+    with pytest.raises(RuntimeError, match="no completed shards"):
+        _campaign(space, tmp_path, mesh, faults=faults)
+
+
+# ---------------------------------------------------------------------------
+# fault schedule + classifier units
+# ---------------------------------------------------------------------------
+def test_classify_failure_taxonomy():
+    assert classify_failure(TransientFault("x")) == "transient"
+    assert classify_failure(ShardTimeout("x")) == "transient"
+    assert classify_failure(OOMFault("x")) == "oom"
+    assert classify_failure(KillCampaign("x")) == "kill"
+    assert classify_failure(MemoryError()) == "oom"
+    assert classify_failure(TimeoutError()) == "transient"
+    assert classify_failure(
+        RuntimeError("RESOURCE_EXHAUSTED: out of memory")) == "oom"
+    assert classify_failure(RuntimeError("UNAVAILABLE: try later")) \
+        == "transient"
+    assert classify_failure(ValueError("shape mismatch")) \
+        == "deterministic"
+
+
+def test_fault_schedule_is_deterministic():
+    mk = lambda: FaultSchedule(seed=7, rates={"transient": 0.5})  # noqa
+    logs = []
+    for _ in range(2):
+        sched, log = mk(), []
+        for lo in range(0, 70, 7):
+            for attempt in (1, 2):
+                try:
+                    sched.check(lo, lo + 7, attempt)
+                except TransientFault:
+                    log.append((lo, attempt))
+        logs.append(log)
+    assert logs[0] == logs[1] and logs[0], "seeded schedule must replay"
+    with pytest.raises(ValueError, match="needs a seed"):
+        FaultSchedule(rates={"transient": 0.5})
+    with pytest.raises(ValueError, match="unknown fault-rate"):
+        FaultSchedule(seed=1, rates={"cosmic": 1.0})
+
+
+def test_plan_shards_and_missing_ranges():
+    assert plan_shards(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert plan_shards(0, 4) == []
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_shards(10, 0)
+    planned = [(0, 4), (4, 8), (8, 10)]
+    assert missing_ranges(planned, []) == planned
+    assert missing_ranges(planned, [(0, 4), (8, 10)]) == [(4, 8)]
+    # OOM half-shards: coverage is interval union, not shard identity
+    assert missing_ranges(planned, [(0, 2), (3, 9)]) == [(2, 3), (9, 10)]
+    assert missing_ranges(planned, planned) == []
+
+
+# ---------------------------------------------------------------------------
+# satellites: index_range + cache-limit validation
+# ---------------------------------------------------------------------------
+def test_index_range_validation(space, mesh):
+    total = space.n_points
+    with pytest.raises(ValueError, match=rf"reversed.*\[0, {total}\)"):
+        explore(space, engine="fused", chunk_size=CHUNK, mesh=mesh,
+                index_range=(5, 2))
+    with pytest.raises(ValueError, match=rf"\[0, {total}\)"):
+        explore(space, engine="fused", chunk_size=CHUNK, mesh=mesh,
+                index_range=(0, total + 1))
+    with pytest.raises(ValueError, match=rf"\[0, {total}\)"):
+        explore(space, engine="fused", chunk_size=CHUNK, mesh=mesh,
+                index_range=(-1, 3))
+    with pytest.raises(ValueError, match="must be integers"):
+        explore(space, engine="fused", chunk_size=CHUNK, mesh=mesh,
+                index_range=("a", 3))
+    with pytest.raises(ValueError, match=r"\(lo, hi\) pair"):
+        explore(space, engine="fused", chunk_size=CHUNK, mesh=mesh,
+                index_range=(1, 2, 3))
+
+
+@pytest.mark.parametrize("engine", ["fused", "staged"])
+def test_empty_index_range_is_well_formed(space, mesh, engine):
+    res = explore(space, engine=engine, chunk_size=CHUNK, k=K,
+                  superchunk=SUPER if engine == "fused" else None,
+                  mesh=mesh, index_range=(9, 9))
+    st = res.stream_result
+    assert (st.n_points, st.n_feasible, st.topk) == (0, 0, [])
+    assert st.dispatches == 0 and st.occupancy == 1.0
+    assert list(st.summaries) and all(
+        sm["n"] == 0 and sm["n_feasible"] == 0 and sm["argmin_point"] is None
+        for sm in st.summaries.values())
+    # an empty shard folds into a merge as a no-op
+    full = explore(space, engine="fused", chunk_size=CHUNK, k=K,
+                   superchunk=SUPER, mesh=mesh, index_range=(0, 9))
+    merged = merge_stream_results([st, full.stream_result])
+    assert merged.n_points == 9
+
+
+def test_stream_cache_limit_validation():
+    old = stream_cache_info()["limit"]
+    try:
+        for bad in (-1, 0, "0", "-3"):
+            with pytest.raises(ValueError, match=">= 1"):
+                set_stream_cache_limit(bad)
+        with pytest.raises(ValueError, match="integer"):
+            set_stream_cache_limit("sixteen")
+        for bad in (2.5, None, True):
+            with pytest.raises(TypeError, match="integer"):
+                set_stream_cache_limit(bad)
+        assert set_stream_cache_limit(5) == old
+        assert stream_cache_info()["limit"] == 5
+    finally:
+        set_stream_cache_limit(old)
+    # the env knob goes through the same gate, naming the variable
+    with pytest.raises(ValueError, match="REPRO_STREAM_CACHE_LIMIT"):
+        _coerce_cache_limit("junk", "REPRO_STREAM_CACHE_LIMIT")
