@@ -1,0 +1,41 @@
+"""``repro.analysis`` — static invariant checker for the sweep hot path.
+
+The repo's hard invariants (ROADMAP: one step executable, fused ==
+staged == monolithic parity, one definition site per axis's physics) are
+enforced dynamically by tier-1 tests — *after* an expensive sweep runs.
+This package checks the two classes of silent corruption those tests
+miss, straight off the AST, in milliseconds:
+
+* **hot-path purity** (``repro.analysis.hotpath``) — host syncs, Python
+  branching on tracers, array construction inside Pallas kernel bodies
+  and non-static shapes fed to ``pallas_call``, for every function
+  reachable from a ``jax.jit`` / ``lax.scan`` / ``pl.pallas_call`` /
+  ``shard_map`` / ``vmap`` root;
+* **recompile triggers** (``repro.analysis.recompile``) — unhashable or
+  per-call-varying values in ``static_argnums`` / ``static_argnames``
+  positions, mutable module globals captured by jitted functions, and
+  donated-buffer reuse after donation;
+* **axis/unit consistency** (``repro.analysis.units``) — every
+  ``Axis.coeff_hook`` term group and ``coeff_cols`` column must be
+  referenced by all three parity-locked evaluators in
+  ``repro.core.batch``, and the ``repro.core.plan`` term constructors
+  must append dimensionally consistent expressions (a lightweight
+  V/A/s/bit lattice: J into constant sinks, W into linear-in-delay
+  sinks).
+
+Findings can be suppressed per line with ``# repro: noqa[rule-name]``
+(or a bare ``# repro: noqa`` for all rules) and pre-existing findings
+live in a checked-in baseline (``baseline.json``).  The CLI —
+``python -m repro.analysis [paths]`` — exits non-zero on any finding
+not in the baseline; see ``--help`` for the baseline/report workflow.
+"""
+from .framework import (DEFAULT_PATHS, Finding, Rule, all_rules,
+                        analyze_paths, default_baseline_path,
+                        load_baseline, partition_findings, register_rule,
+                        rule_names, save_baseline)
+
+__all__ = [
+    "DEFAULT_PATHS", "Finding", "Rule", "all_rules", "analyze_paths",
+    "default_baseline_path", "load_baseline", "partition_findings",
+    "register_rule", "rule_names", "save_baseline",
+]

@@ -1,0 +1,747 @@
+"""Shared AST infrastructure for the rule families.
+
+Three layers:
+
+* :func:`build_aliases` / :func:`dotted` / canonical names — resolve
+  ``jnp.transpose`` to ``jax.numpy.transpose`` regardless of how the
+  module spelled its imports;
+* :class:`ScopeIndex` — every ``def``/``lambda`` in the module with its
+  enclosing-function chain, so closures and locally-defined scan bodies
+  resolve;
+* :class:`TaintEngine` — discovers *hot roots* (functions handed to
+  ``jax.jit`` / ``jax.vmap`` / ``lax.scan`` / ``shard_map`` /
+  ``pl.pallas_call``, via call or decorator, including
+  ``functools.partial`` wrappers), taints their traced parameters, and
+  propagates taint through assignments, local calls (union over call
+  sites, iterated to a fixed point) and closure reads.  While walking it
+  records raw events — host syncs, Python branches on tracers, array
+  construction inside kernel bodies — that the rule modules turn into
+  findings.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .framework import ModuleContext
+
+# Attribute reads that never yield a tracer even on a traced value.
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+# jax.* calls whose results are static metadata, not traced arrays.
+TRANSPARENT_CALLS = {
+    "jax.ShapeDtypeStruct",
+    "jax.experimental.pallas.BlockSpec",
+    "jax.experimental.pallas.cdiv",
+    "jax.tree_util.tree_structure",
+}
+
+# Methods that force a device->host transfer of the receiver.
+HOST_SYNC_METHODS = {"item", "tolist"}
+
+# Builtins that concretize a traced argument on the host.
+HOST_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+
+# Builtins that iterate/compare their argument (ConcretizationError on a
+# tracer -- same failure class as `if tracer:`).
+BRANCH_BUILTINS = {"min", "max", "sum", "any", "all", "sorted", "range"}
+
+# Builtins returning host containers; result taint = taint of contents.
+CONTAINER_BUILTINS = {"tuple", "list", "dict", "set", "zip", "enumerate",
+                      "reversed", "map", "filter", "frozenset"}
+
+# Array layout transforms (method or jnp.* spelling) for the
+# hot-invariant-transform rule.
+TRANSFORM_OPS = {"transpose", "reshape", "astype", "ravel", "flatten",
+                 "swapaxes", "moveaxis", "broadcast_to"}
+
+
+def build_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to canonical dotted module paths."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    head = a.name.split(".")[0]
+                    aliases[head] = head
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as ``a.b.c`` (None otherwise)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def canonical(aliases: Dict[str, str], name: Optional[str]) -> Optional[str]:
+    if not name:
+        return None
+    head, _, rest = name.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+@dataclass
+class FnInfo:
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+    name: str
+    parent: Optional["FnInfo"]
+    pos_params: List[str]
+    kwonly_params: List[str]
+    depth: int = 0
+
+    @property
+    def all_params(self) -> List[str]:
+        return self.pos_params + self.kwonly_params
+
+
+class ScopeIndex(ast.NodeVisitor):
+    """Every def/lambda with its enclosing chain + name lookup tables."""
+
+    def __init__(self, tree: ast.Module):
+        self.by_node: Dict[int, FnInfo] = {}
+        self.defs_in_scope: Dict[Optional[int], Dict[str, FnInfo]] = {None: {}}
+        self.by_name: Dict[str, List[FnInfo]] = {}
+        self._stack: List[FnInfo] = []
+        self.visit(tree)
+
+    def _register(self, name: str, node: ast.AST) -> FnInfo:
+        args = node.args
+        pos = [a.arg for a in getattr(args, "posonlyargs", []) + args.args]
+        kwonly = [a.arg for a in args.kwonlyargs]
+        parent = self._stack[-1] if self._stack else None
+        info = FnInfo(node=node, name=name, parent=parent, pos_params=pos,
+                      kwonly_params=kwonly, depth=len(self._stack))
+        self.by_node[id(node)] = info
+        scope_key = id(parent.node) if parent else None
+        self.defs_in_scope.setdefault(scope_key, {})[name] = info
+        self.by_name.setdefault(name, []).append(info)
+        return info
+
+    def _visit_fn(self, node, name):
+        info = self._register(name, node)
+        self._stack.append(info)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self._visit_fn(node, node.name)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._visit_fn(node, node.name)
+
+    def visit_Lambda(self, node):
+        self._visit_fn(node, "<lambda>")
+
+    def visit_Assign(self, node):
+        # `f = lambda ...:` acts as a named local function definition.
+        if (isinstance(node.value, ast.Lambda)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            info = self.by_node.get(id(node.value))
+            if info is None:
+                info = self._register(node.targets[0].id, node.value)
+                self._stack.append(info)
+                self.generic_visit(node.value)
+                self._stack.pop()
+            else:
+                info.name = node.targets[0].id
+            scope_key = id(info.parent.node) if info.parent else None
+            self.defs_in_scope.setdefault(scope_key, {})[info.name] = info
+            self.by_name.setdefault(info.name, []).append(info)
+            for t in node.targets:
+                self.visit(t)
+        else:
+            self.generic_visit(node)
+
+    def resolve(self, name: str, within: Optional[FnInfo]) -> Optional[FnInfo]:
+        """Look ``name`` up along the enclosing-scope chain, falling back
+        to a unique module-wide match (covers functions passed around as
+        values, e.g. ``jax.jit(step_fn)`` where step_fn is a parameter)."""
+        info = within
+        while True:
+            scope_key = id(info.node) if info else None
+            hit = self.defs_in_scope.get(scope_key, {}).get(name)
+            if hit is not None:
+                return hit
+            if info is None:
+                break
+            info = info.parent
+        cands = self.by_name.get(name, [])
+        return cands[0] if len(cands) == 1 else None
+
+
+@dataclass
+class FnState:
+    info: FnInfo
+    tainted: Set[str] = field(default_factory=set)
+    is_kernel: bool = False
+    root_kinds: Set[str] = field(default_factory=set)
+
+
+@dataclass(frozen=True)
+class Event:
+    kind: str  # "host-sync" | "tracer-branch" | "kernel-array"
+    line: int
+    message: str
+
+
+@dataclass
+class PallasSite:
+    call: ast.Call
+    enclosing: Optional[FnInfo]
+
+
+@dataclass
+class JitBinding:
+    call: ast.Call                      # the jax.jit(...) call node
+    fn_info: Optional[FnInfo]           # resolved target (may be None)
+    name: Optional[str]                 # bound variable name, if any
+    static_argnums: Tuple[int, ...]
+    static_argnames: Tuple[str, ...]
+    donate_argnums: Tuple[int, ...]
+    line: int = 0
+
+
+def _const_seq(node) -> Tuple:
+    """Extract a literal int/str or tuple/list of literals; () if not."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, (int, str)):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, (int, str)):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+class TaintEngine:
+    """Hot-root discovery + fixed-point taint propagation for one module."""
+
+    def __init__(self, ctx: ModuleContext):
+        self.ctx = ctx
+        self.aliases = build_aliases(ctx.tree)
+        self.scopes = ScopeIndex(ctx.tree)
+        self.states: Dict[int, FnState] = {}
+        self.events: Set[Event] = set()
+        self.pallas_sites: List[PallasSite] = []
+        self.jit_bindings: List[JitBinding] = []
+        self.quiet = False  # True while rules probe expression taint
+        self._enclosing_of: Dict[int, Optional[FnInfo]] = {}
+        self._index_enclosing(ctx.tree, None)
+        self._discover_roots()
+        self._fixed_point()
+
+    # -- setup -----------------------------------------------------------
+
+    def canon(self, node: ast.AST) -> Optional[str]:
+        return canonical(self.aliases, dotted(node))
+
+    def _index_enclosing(self, node, current):
+        for child in ast.iter_child_nodes(node):
+            self._enclosing_of[id(child)] = current
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                info = self.scopes.by_node.get(id(child))
+                self._index_enclosing(child, info or current)
+            else:
+                self._index_enclosing(child, current)
+
+    def state_for(self, info: FnInfo) -> FnState:
+        st = self.states.get(id(info.node))
+        if st is None:
+            st = FnState(info=info)
+            self.states[id(info.node)] = st
+        return st
+
+    def _resolve_fn(self, node, within) -> Tuple[Optional[FnInfo], int]:
+        """Resolve a function-valued expression; also returns how many
+        leading positional params a functools.partial wrapper binds."""
+        bound = 0
+        if (isinstance(node, ast.Call)
+                and self.canon(node.func) == "functools.partial"
+                and node.args):
+            bound = len(node.args) - 1
+            node = node.args[0]
+        if isinstance(node, ast.Lambda):
+            return self.scopes.by_node.get(id(node)), bound
+        if isinstance(node, ast.Name):
+            return self.scopes.resolve(node.id, within), bound
+        return None, bound
+
+    def _mark_root(self, info: Optional[FnInfo], tainted: Sequence[str],
+                   kind: str, kernel: bool = False) -> None:
+        if info is None:
+            return
+        st = self.state_for(info)
+        st.tainted |= set(tainted)
+        st.root_kinds.add(kind)
+        st.is_kernel = st.is_kernel or kernel
+
+    def _discover_roots(self) -> None:
+        for node in ast.walk(self.ctx.tree):
+            if isinstance(node, ast.Call):
+                self._root_from_call(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    self._root_from_decorator(node, dec)
+
+    def _jit_statics(self, call: ast.Call):
+        nums: Tuple[int, ...] = ()
+        names: Tuple[str, ...] = ()
+        donate: Tuple[int, ...] = ()
+        for kw in call.keywords:
+            if kw.arg == "static_argnums":
+                nums = tuple(v for v in _const_seq(kw.value)
+                             if isinstance(v, int))
+            elif kw.arg == "static_argnames":
+                names = tuple(v for v in _const_seq(kw.value)
+                              if isinstance(v, str))
+            elif kw.arg in ("donate_argnums", "donate_argnames"):
+                donate = tuple(v for v in _const_seq(kw.value)
+                               if isinstance(v, int))
+        return nums, names, donate
+
+    def _jit_tainted_params(self, info: FnInfo, nums, names) -> List[str]:
+        tainted = [p for i, p in enumerate(info.pos_params)
+                   if i not in nums and p not in names]
+        tainted += [p for p in info.kwonly_params if p not in names]
+        return tainted
+
+    def _root_from_call(self, call: ast.Call) -> None:
+        fname = self.canon(call.func)
+        if not fname:
+            return
+        within = self._enclosing_of.get(id(call))
+        last = fname.rsplit(".", 1)[-1]
+        if fname in ("jax.jit", "jax.pmap") and call.args:
+            info, bound = self._resolve_fn(call.args[0], within)
+            nums, names, donate = self._jit_statics(call)
+            if info is not None:
+                self._mark_root(
+                    info,
+                    self._jit_tainted_params(info, nums, names)[bound:],
+                    "jit")
+            tgt = self._binding_name(call)
+            self.jit_bindings.append(JitBinding(
+                call=call, fn_info=info, name=tgt, static_argnums=nums,
+                static_argnames=names, donate_argnums=donate,
+                line=call.lineno))
+        elif fname == "jax.lax.scan" and call.args:
+            info, bound = self._resolve_fn(call.args[0], within)
+            if info is not None:
+                self._mark_root(info, info.pos_params[bound:], "scan")
+        elif fname == "jax.vmap" and call.args:
+            info, bound = self._resolve_fn(call.args[0], within)
+            if info is not None:
+                self._mark_root(info, info.pos_params[bound:], "vmap")
+        elif last == "shard_map" and call.args:
+            info, bound = self._resolve_fn(call.args[0], within)
+            if info is not None:
+                self._mark_root(info, info.pos_params[bound:], "shard_map")
+        elif last == "pallas_call" and call.args:
+            info, bound = self._resolve_fn(call.args[0], within)
+            if info is not None:
+                # positional params are Refs (traced); kwonly params are
+                # partial-bound compile-time config.
+                self._mark_root(info, info.pos_params[bound:], "pallas",
+                                kernel=True)
+            self.pallas_sites.append(PallasSite(call=call, enclosing=within))
+
+    def _root_from_decorator(self, fn_node, dec) -> None:
+        info = self.scopes.by_node.get(id(fn_node))
+        if info is None:
+            return
+        name = self.canon(dec)
+        if name in ("jax.jit", "jax.pmap", "jax.vmap"):
+            self._mark_root(info, info.all_params, "jit")
+            if name != "jax.vmap":
+                self.jit_bindings.append(JitBinding(
+                    call=dec if isinstance(dec, ast.Call) else None,
+                    fn_info=info, name=info.name, static_argnums=(),
+                    static_argnames=(), donate_argnums=(),
+                    line=fn_node.lineno))
+            return
+        if not isinstance(dec, ast.Call):
+            return
+        dname = self.canon(dec.func)
+        inner = dec
+        if dname == "functools.partial" and dec.args:
+            inner_name = self.canon(dec.args[0])
+            if inner_name not in ("jax.jit", "jax.pmap"):
+                return
+        elif dname not in ("jax.jit", "jax.pmap"):
+            return
+        nums, names, donate = self._jit_statics(inner)
+        self._mark_root(info, self._jit_tainted_params(info, nums, names),
+                        "jit")
+        self.jit_bindings.append(JitBinding(
+            call=inner, fn_info=info, name=info.name, static_argnums=nums,
+            static_argnames=names, donate_argnums=donate,
+            line=fn_node.lineno))
+
+    def _binding_name(self, jit_call: ast.Call) -> Optional[str]:
+        """Name bound to a jax.jit(...) result, unwrapping
+        ``jax.jit(f).lower(...).compile(...)`` chains."""
+        node = jit_call
+        parent = self._parent_expr(node)
+        while parent is not None:
+            if isinstance(parent, ast.Attribute):
+                parent = self._parent_expr(parent)
+                continue
+            if isinstance(parent, ast.Call):
+                node = parent
+                parent = self._parent_expr(parent)
+                continue
+            break
+        for stmt in ast.walk(self.ctx.tree):
+            if isinstance(stmt, ast.Assign) and stmt.value is node:
+                if len(stmt.targets) == 1 and isinstance(stmt.targets[0],
+                                                         ast.Name):
+                    return stmt.targets[0].id
+        return None
+
+    def _parent_expr(self, node):
+        if not hasattr(self, "_parents"):
+            self._parents = {}
+            for n in ast.walk(self.ctx.tree):
+                for c in ast.iter_child_nodes(n):
+                    self._parents[id(c)] = n
+        return self._parents.get(id(node))
+
+    # -- fixed point -----------------------------------------------------
+
+    def _snapshot(self):
+        return tuple(sorted(
+            (k, frozenset(v.tainted), v.is_kernel)
+            for k, v in self.states.items()))
+
+    def _fixed_point(self) -> None:
+        for _ in range(12):
+            before = self._snapshot()
+            for st in sorted(self.states.values(),
+                             key=lambda s: s.info.depth):
+                _FnWalker(self, st).run()
+            if self._snapshot() == before:
+                break
+
+    # -- events ----------------------------------------------------------
+
+    def emit(self, kind: str, line: int, message: str) -> None:
+        if not self.quiet:
+            self.events.add(Event(kind=kind, line=line, message=message))
+
+    def hot_functions(self) -> List[FnState]:
+        return [st for st in self.states.values()]
+
+    # -- expression taint (shared with rules via expr_taint) -------------
+
+    def expr_taint(self, node, st: FnState) -> bool:
+        return _FnWalker(self, st).taint(node)
+
+    def probe_taint(self, node, st: Optional[FnState]) -> bool:
+        """Side-effect-free taint query for rule modules."""
+        if st is None:
+            st = FnState(info=FnInfo(node=self.ctx.tree, name="<module>",
+                                     parent=None, pos_params=[],
+                                     kwonly_params=[]))
+        self.quiet = True
+        try:
+            return self.expr_taint(node, st)
+        finally:
+            self.quiet = False
+
+
+class _FnWalker:
+    """Walk one hot function's body in statement order, propagating taint
+    and emitting events."""
+
+    def __init__(self, engine: TaintEngine, st: FnState):
+        self.e = engine
+        self.st = st
+
+    def run(self) -> None:
+        node = self.st.info.node
+        if isinstance(node, ast.Lambda):
+            self.taint(node.body)
+        else:
+            self.block(node.body)
+
+    # -- statements ------------------------------------------------------
+
+    def block(self, stmts) -> None:
+        for s in stmts:
+            self.stmt(s)
+
+    def bind(self, target, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.st.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self.bind(target.value, tainted)
+        elif isinstance(target, (ast.Subscript, ast.Attribute)):
+            # mutating a slot of a container taints the container
+            base = target
+            while isinstance(base, (ast.Subscript, ast.Attribute)):
+                base = base.value
+            if tainted and isinstance(base, ast.Name):
+                self.st.tainted.add(base.id)
+
+    def stmt(self, s) -> None:
+        if isinstance(s, ast.Assign):
+            t = self.taint(s.value)
+            for tgt in s.targets:
+                self.bind(tgt, t)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self.bind(s.target, self.taint(s.value))
+        elif isinstance(s, ast.AugAssign):
+            t = self.taint(s.value) or self.taint(s.target)
+            self.bind(s.target, t)
+        elif isinstance(s, ast.Return):
+            if s.value is not None:
+                self.taint(s.value)
+        elif isinstance(s, ast.Expr):
+            self.taint(s.value)
+        elif isinstance(s, (ast.If, ast.While)):
+            if self.taint(s.test):
+                kw = "while" if isinstance(s, ast.While) else "if"
+                self.e.emit("tracer-branch", s.lineno,
+                            f"Python `{kw}` condition depends on a traced "
+                            "value; use jnp.where / lax.cond instead")
+            body_passes = 2 if isinstance(s, ast.While) else 1
+            for _ in range(body_passes):
+                self.block(s.body)
+            self.block(s.orelse)
+        elif isinstance(s, ast.Assert):
+            if self.taint(s.test):
+                self.e.emit("tracer-branch", s.lineno,
+                            "assert on a traced value concretizes it; "
+                            "use checkify or move the check to the host")
+        elif isinstance(s, ast.For):
+            it = self.taint(s.iter)
+            if it:
+                self.e.emit("tracer-branch", s.lineno,
+                            "Python `for` over a traced value; use "
+                            "lax.scan / lax.fori_loop instead")
+            self.bind(s.target, it)
+            for _ in range(2):
+                self.block(s.body)
+            self.block(s.orelse)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.taint(item.context_expr)
+                if item.optional_vars is not None:
+                    self.bind(item.optional_vars, False)
+            self.block(s.body)
+        elif isinstance(s, ast.Try):
+            self.block(s.body)
+            for h in s.handlers:
+                self.block(h.body)
+            self.block(s.orelse)
+            self.block(s.finalbody)
+        elif isinstance(s, ast.Raise):
+            if s.exc is not None:
+                self.taint(s.exc)
+        elif isinstance(s, ast.Delete):
+            pass
+        # nested FunctionDef/ClassDef bodies are separate scopes: they are
+        # analyzed when discovered as roots or reached through a call.
+
+    # -- expressions -----------------------------------------------------
+
+    def _name_taint(self, name: str) -> bool:
+        if name in self.st.tainted:
+            return True
+        info = self.st.info.parent
+        while info is not None:
+            parent_st = self.e.states.get(id(info.node))
+            if parent_st is not None and name in parent_st.tainted:
+                return True
+            info = info.parent
+        return False
+
+    def taint(self, node) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return self._name_taint(node.id)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                self.taint(node.value)
+                return False
+            return self.taint(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.taint(node.value) or self.taint(node.slice)
+        if isinstance(node, ast.Slice):
+            return any(self.taint(x) for x in
+                       (node.lower, node.upper, node.step))
+        if isinstance(node, ast.BinOp):
+            return self.taint(node.left) | self.taint(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.taint(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any([self.taint(v) for v in node.values])
+        if isinstance(node, ast.Compare):
+            t = self.taint(node.left)
+            for c in node.comparators:
+                t |= self.taint(c)
+            return t
+        if isinstance(node, ast.Call):
+            return self.call_taint(node)
+        if isinstance(node, ast.IfExp):
+            if self.taint(node.test):
+                self.e.emit("tracer-branch", node.lineno,
+                            "conditional expression on a traced value; "
+                            "use jnp.where instead")
+            return self.taint(node.body) | self.taint(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any([self.taint(e) for e in node.elts])
+        if isinstance(node, ast.Dict):
+            return (any([self.taint(k) for k in node.keys if k is not None])
+                    | any([self.taint(v) for v in node.values]))
+        if isinstance(node, ast.Starred):
+            return self.taint(node.value)
+        if isinstance(node, ast.Lambda):
+            return False
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            t = False
+            for gen in node.generators:
+                if self.taint(gen.iter):
+                    self.e.emit("tracer-branch", node.lineno,
+                                "comprehension over a traced value; use "
+                                "vectorized jnp ops or lax.scan")
+                    t = True
+            return t
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return False
+        if isinstance(node, ast.NamedExpr):
+            t = self.taint(node.value)
+            self.bind(node.target, t)
+            return t
+        return False
+
+    def call_taint(self, call: ast.Call) -> bool:
+        arg_taints = [self.taint(a) for a in call.args]
+        kw_taints = {kw.arg: self.taint(kw.value) for kw in call.keywords}
+        any_arg = any(arg_taints) or any(kw_taints.values())
+        func = call.func
+
+        # method call on a traced receiver
+        if isinstance(func, ast.Attribute):
+            recv_dotted = dotted(func)
+            fname = canonical(self.e.aliases, recv_dotted)
+            if fname is None or not self._is_module_path(fname):
+                recv_tainted = self.taint(func.value)
+                if recv_tainted:
+                    if func.attr in HOST_SYNC_METHODS:
+                        self.e.emit(
+                            "host-sync", call.lineno,
+                            f".{func.attr}() on a traced value forces a "
+                            "device->host transfer inside the hot path")
+                        return False
+                    return True
+                return any_arg
+        else:
+            fname = canonical(self.e.aliases, dotted(func))
+
+        if fname is None:
+            return any_arg
+        if fname in TRANSPARENT_CALLS:
+            return False
+        if fname == "jax.device_get":
+            if any_arg:
+                self.e.emit("host-sync", call.lineno,
+                            "jax.device_get on a traced value inside the "
+                            "hot path")
+            return False
+        if fname.startswith("jax."):
+            if (self.st.is_kernel
+                    and fname in ("jax.numpy.array", "jax.numpy.asarray")):
+                self.e.emit(
+                    "kernel-array", call.lineno,
+                    f"{fname.rsplit('.', 1)[-1]}() constructs an array "
+                    "inside a Pallas kernel body; build inputs outside "
+                    "the kernel or use iota/broadcast on Refs")
+            return True
+        if fname.startswith("numpy."):
+            if any_arg:
+                self.e.emit(
+                    "host-sync", call.lineno,
+                    f"{fname} called on a traced value pulls it to the "
+                    "host; use the jnp equivalent")
+            return False
+        if fname in HOST_SYNC_BUILTINS:
+            if any_arg:
+                self.e.emit(
+                    "host-sync", call.lineno,
+                    f"{fname}() on a traced value forces concretization "
+                    "on the host; keep it as an array or mark the "
+                    "argument static")
+            return False
+        if fname in BRANCH_BUILTINS:
+            if any_arg:
+                self.e.emit(
+                    "tracer-branch", call.lineno,
+                    f"{fname}() iterates/compares a traced value on the "
+                    "host; use the jnp reduction instead")
+            return False
+        if fname == "len":
+            return False
+        if fname in CONTAINER_BUILTINS:
+            return any_arg
+        if fname in ("print", "repr", "str", "format", "isinstance",
+                     "getattr", "hasattr", "abs", "divmod", "round"):
+            return any_arg and fname in ("abs", "divmod", "round", "getattr")
+
+        # local call: propagate taint into the callee's parameters
+        info = None
+        if isinstance(func, ast.Name):
+            info = self.e.scopes.resolve(func.id, self.st.info)
+        if info is not None:
+            callee = self.e.state_for(info)
+            callee.is_kernel = callee.is_kernel or self.st.is_kernel
+            for i, t in enumerate(arg_taints):
+                if t and i < len(info.pos_params):
+                    callee.tainted.add(info.pos_params[i])
+            for name, t in kw_taints.items():
+                if t and name in info.all_params:
+                    callee.tainted.add(name)
+            # calls reached from hot code are hot (even with no traced
+            # args yet); result conservatively traced
+            return True
+        return any_arg
+
+    @staticmethod
+    def _is_module_path(fname: str) -> bool:
+        head = fname.split(".")[0]
+        return head in ("jax", "numpy", "math", "functools", "itertools",
+                        "operator", "os", "collections")
+
+
+def get_engine(ctx: ModuleContext) -> TaintEngine:
+    eng = ctx.cache.get("taint_engine")
+    if eng is None:
+        eng = TaintEngine(ctx)
+        ctx.cache["taint_engine"] = eng
+    return eng

@@ -1,0 +1,155 @@
+"""Hot-path purity rules.
+
+All five rules share one :class:`~repro.analysis.astutil.TaintEngine`
+run per module (cached on the context): functions reachable from
+``jax.jit`` / ``lax.scan`` / ``vmap`` / ``shard_map`` /
+``pl.pallas_call`` have their traced parameters tainted, taint is
+propagated to a fixed point, and the engine records host syncs, tracer
+branching and kernel-body array construction as events.  The rules here
+turn events into findings and add two structural checks that need the
+taint result but not the event stream (non-static ``pallas_call``
+shapes; dispatch-invariant layout transforms re-done inside a jitted
+scan driver).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from . import astutil
+from .framework import Finding, ModuleContext, register_rule
+from .astutil import TRANSFORM_OPS, canonical, dotted
+
+
+def _event_findings(ctx: ModuleContext, kind: str, rule: str
+                    ) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    for ev in sorted(eng.events, key=lambda e: (e.line, e.message)):
+        if ev.kind == kind:
+            yield Finding(rule=rule, path=ctx.path, line=ev.line,
+                          message=ev.message)
+
+
+@register_rule(
+    "hot-host-sync",
+    description="device->host transfer (float()/int()/.item()/np.*/"
+                "device_get on a traced value) inside jit/scan/kernel code")
+def hot_host_sync(ctx: ModuleContext) -> Iterable[Finding]:
+    return _event_findings(ctx, "host-sync", "hot-host-sync")
+
+
+@register_rule(
+    "hot-tracer-branch",
+    description="Python control flow (if/while/for/assert/comprehension/"
+                "min/max) on a traced value inside hot code")
+def hot_tracer_branch(ctx: ModuleContext) -> Iterable[Finding]:
+    return _event_findings(ctx, "tracer-branch", "hot-tracer-branch")
+
+
+@register_rule(
+    "hot-kernel-array",
+    description="jnp.array/jnp.asarray construction inside a Pallas "
+                "kernel body")
+def hot_kernel_array(ctx: ModuleContext) -> Iterable[Finding]:
+    return _event_findings(ctx, "kernel-array", "hot-kernel-array")
+
+
+@register_rule(
+    "hot-nonstatic-pallas-shape",
+    description="grid=/out_shape= fed to pl.pallas_call depends on a "
+                "traced value (shapes must be static)")
+def hot_nonstatic_pallas_shape(ctx: ModuleContext) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    out: List[Finding] = []
+    for site in eng.pallas_sites:
+        st = None
+        if site.enclosing is not None:
+            st = eng.states.get(id(site.enclosing.node))
+        for kw in site.call.keywords:
+            if kw.arg in ("grid", "out_shape") and st is not None:
+                if eng.probe_taint(kw.value, st):
+                    out.append(Finding(
+                        rule="hot-nonstatic-pallas-shape", path=ctx.path,
+                        line=kw.value.lineno,
+                        message=f"`{kw.arg}=` passed to pallas_call "
+                                "depends on a traced value; grids and "
+                                "output shapes must be static (derive "
+                                "them from static args or .shape)"))
+    return out
+
+
+def _transform_chain_base(eng: astutil.TaintEngine, expr: ast.AST):
+    """Peel `jnp.transpose(x,..).reshape(..).astype(..)`-style chains;
+    returns (ops, base_expr)."""
+    ops: List[str] = []
+    node = expr
+    while isinstance(node, ast.Call):
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            fname = canonical(eng.aliases, dotted(func))
+            if fname and fname.startswith("jax.numpy.") \
+                    and func.attr in TRANSFORM_OPS and node.args:
+                ops.append(func.attr)
+                node = node.args[0]
+                continue
+            if func.attr in TRANSFORM_OPS:
+                ops.append(func.attr)
+                node = func.value
+                continue
+        break
+    return ops, node
+
+
+def _contains_direct_scan(eng: astutil.TaintEngine, fn_node) -> bool:
+    """True if the function body (not counting nested defs) calls
+    jax.lax.scan."""
+    stack = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Call) \
+                and canonical(eng.aliases, dotted(node.func)) \
+                == "jax.lax.scan":
+            return True
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+@register_rule(
+    "hot-invariant-transform",
+    description="layout transform (transpose/reshape/astype chain) of a "
+                "jit argument recomputed inside a scan-driving jitted "
+                "function on every dispatch")
+def hot_invariant_transform(ctx: ModuleContext) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    out: List[Finding] = []
+    for st in eng.states.values():
+        if "jit" not in st.root_kinds:
+            continue
+        node = st.info.node
+        if isinstance(node, ast.Lambda):
+            continue
+        if not _contains_direct_scan(eng, node):
+            continue
+        params = set(st.info.all_params)
+        for stmt in node.body:
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            value = stmt.value
+            if value is None:
+                continue
+            ops, base = _transform_chain_base(eng, value)
+            if len(ops) >= 2 and isinstance(base, ast.Name) \
+                    and base.id in params:
+                chain = ".".join(reversed(ops))
+                out.append(Finding(
+                    rule="hot-invariant-transform", path=ctx.path,
+                    line=stmt.lineno,
+                    message=f"`{base.id}` is re-laid-out "
+                            f"({chain}) inside the jitted scan driver "
+                            f"`{st.info.name}` on every dispatch; hoist "
+                            "the transform to the caller and pass the "
+                            "transformed array in"))
+    return out

@@ -1,0 +1,267 @@
+"""Recompile-trigger rules.
+
+These reuse the taint engine's jit-binding table (every ``jax.jit(...)``
+call with its literal ``static_argnums`` / ``static_argnames`` /
+``donate_argnums``, the resolved target function, and the name the
+compiled callable is bound to, unwrapping ``.lower(...).compile(...)``
+AOT chains).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from . import astutil
+from .framework import Finding, ModuleContext, register_rule
+
+# expressions that produce a fresh unhashable object at every call site
+_UNHASHABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                        ast.SetComp, ast.DictComp, ast.GeneratorExp)
+_UNHASHABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+
+def _unhashable_reason(node: ast.AST) -> Optional[str]:
+    if isinstance(node, _UNHASHABLE_DISPLAYS):
+        return type(node).__name__.lower().replace("comp", " comprehension")
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _UNHASHABLE_CTORS:
+        return f"{node.func.id}()"
+    return None
+
+
+def _call_sites(tree: ast.Module, name: str) -> List[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Name) and n.func.id == name]
+
+
+@register_rule(
+    "jit-unhashable-static",
+    description="unhashable (fresh-per-call) value passed in a "
+                "static_argnums/static_argnames position of a jitted "
+                "callable — retraces on every call, then fails to hash")
+def jit_unhashable_static(ctx: ModuleContext) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    out: List[Finding] = []
+
+    def check_call(call: ast.Call, nums: Tuple[int, ...],
+                   names: Tuple[str, ...], label: str) -> None:
+        for i in nums:
+            if i < len(call.args):
+                reason = _unhashable_reason(call.args[i])
+                if reason:
+                    out.append(Finding(
+                        rule="jit-unhashable-static", path=ctx.path,
+                        line=call.args[i].lineno,
+                        message=f"argument {i} of `{label}` is declared "
+                                f"static but receives a {reason} — "
+                                "unhashable and rebuilt per call, so "
+                                "every call retraces (or raises)"))
+        for kw in call.keywords:
+            if kw.arg in names:
+                reason = _unhashable_reason(kw.value)
+                if reason:
+                    out.append(Finding(
+                        rule="jit-unhashable-static", path=ctx.path,
+                        line=kw.value.lineno,
+                        message=f"static_argname `{kw.arg}` of `{label}` "
+                                f"receives a {reason} — unhashable and "
+                                "rebuilt per call, so every call "
+                                "retraces (or raises)"))
+
+    for b in eng.jit_bindings:
+        if not (b.static_argnums or b.static_argnames):
+            continue
+        # direct invocation: jax.jit(f, static_argnums=...)(args...)
+        if b.call is not None:
+            parent = eng._parent_expr(b.call)
+            if isinstance(parent, ast.Call) and parent.func is b.call:
+                check_call(parent, b.static_argnums, b.static_argnames,
+                           "jax.jit(...)")
+        # named invocation: g = jax.jit(f, ...); ...; g(args...)
+        if b.name:
+            for call in _call_sites(ctx.tree, b.name):
+                check_call(call, b.static_argnums, b.static_argnames,
+                           b.name)
+    return out
+
+
+def _mutable_globals(tree: ast.Module) -> Set[str]:
+    """Module-level names bound to mutable container literals/ctors."""
+    out: Set[str] = set()
+    for stmt in tree.body:
+        targets: List[ast.expr] = []
+        value = None
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        if value is None:
+            continue
+        is_mutable = isinstance(value, (ast.List, ast.Dict, ast.Set))
+        if isinstance(value, ast.Call):
+            fname = astutil.dotted(value.func) or ""
+            last = fname.rsplit(".", 1)[-1]
+            is_mutable = last in ("list", "dict", "set", "OrderedDict",
+                                  "defaultdict", "deque", "Counter")
+        if is_mutable:
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+@register_rule(
+    "jit-mutable-global",
+    description="jit/scan/kernel code reads a mutable module-level "
+                "container — its contents are baked in at trace time and "
+                "later mutations silently don't take effect")
+def jit_mutable_global(ctx: ModuleContext) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    globals_ = _mutable_globals(ctx.tree)
+    if not globals_:
+        return []
+    out: List[Finding] = []
+    seen: Set[Tuple[str, int]] = set()
+    for st in eng.states.values():
+        node = st.info.node
+        body = [node.body] if isinstance(node, ast.Lambda) else node.body
+        stack = list(body)
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+                continue  # nested scopes have their own states
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                    and n.id in globals_:
+                key = (n.id, n.lineno)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(Finding(
+                        rule="jit-mutable-global", path=ctx.path,
+                        line=n.lineno,
+                        message=f"hot function `{st.info.name}` reads "
+                                f"mutable module global `{n.id}`; its "
+                                "value is captured at trace time — pass "
+                                "it as an argument or make it immutable"))
+            if isinstance(n, ast.AST):
+                stack.extend(ast.iter_child_nodes(n))
+            elif isinstance(n, list):
+                stack.extend(n)
+    return out
+
+
+class _DonationScan:
+    """Linear statement scan: after `exe(... x ...)` donates x's buffer,
+    any read of x before rebinding is a use-after-donation."""
+
+    def __init__(self, ctx: ModuleContext, exe_name: str,
+                 donate: Tuple[int, ...], arity: Optional[int] = None):
+        self.ctx = ctx
+        self.exe = exe_name
+        self.donate = donate
+        # several compiled callables may share a variable name (e.g. two
+        # builders both binding `exe`); the positional arity of the jitted
+        # target tells their call sites apart
+        self.arity = arity
+        self.dead: Set[str] = set()
+        self.findings: List[Finding] = []
+        self._emitted: Set[Tuple[str, int]] = set()
+
+    def _loads(self, node) -> List[ast.Name]:
+        return [n for n in ast.walk(node)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)]
+
+    def _exe_calls(self, node) -> List[ast.Call]:
+        return [n for n in ast.walk(node)
+                if isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Name) and n.func.id == self.exe
+                and (self.arity is None or len(n.args) == self.arity)]
+
+    def _stores(self, node) -> Set[str]:
+        return {n.id for n in ast.walk(node)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)}
+
+    def stmt(self, s) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            return
+        if isinstance(s, (ast.If, ast.While)):
+            passes = 2 if isinstance(s, ast.While) else 1
+            for _ in range(passes):
+                self.block(s.body)
+            self.block(s.orelse)
+            return
+        if isinstance(s, ast.For):
+            for n in self._loads(s.iter):
+                self._check(n)
+            for _ in range(2):
+                self.block(s.body)
+            self.block(s.orelse)
+            return
+        if isinstance(s, ast.With):
+            self.block(s.body)
+            return
+        if isinstance(s, ast.Try):
+            self.block(s.body)
+            for h in s.handlers:
+                self.block(h.body)
+            self.block(s.orelse)
+            self.block(s.finalbody)
+            return
+        # 1) reads of donated-dead names
+        for n in self._loads(s):
+            self._check(n)
+        # 2) new donations
+        for call in self._exe_calls(s):
+            for i in self.donate:
+                if i < len(call.args) and isinstance(call.args[i], ast.Name):
+                    self.dead.add(call.args[i].id)
+        # 3) stores rebind
+        self.dead -= self._stores(s)
+
+    def _check(self, n: ast.Name) -> None:
+        if n.id in self.dead:
+            key = (n.id, n.lineno)
+            if key not in self._emitted:
+                self._emitted.add(key)
+                self.findings.append(Finding(
+                    rule="jit-donated-reuse", path=self.ctx.path,
+                    line=n.lineno,
+                    message=f"`{n.id}` was donated to `{self.exe}` "
+                            "(donate_argnums) and its buffer is invalid "
+                            "after the call; rebind the name from the "
+                            "call's result before reusing it"))
+
+    def block(self, stmts) -> None:
+        for s in stmts:
+            self.stmt(s)
+
+
+@register_rule(
+    "jit-donated-reuse",
+    description="a buffer passed in a donate_argnums position is read "
+                "again after the donating call without rebinding")
+def jit_donated_reuse(ctx: ModuleContext) -> Iterable[Finding]:
+    eng = astutil.get_engine(ctx)
+    out: List[Finding] = []
+    for b in eng.jit_bindings:
+        if not b.donate_argnums or not b.name:
+            continue
+        # scan every function whose body calls the compiled name
+        scanned: Set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if id(node) in scanned:
+                continue
+            if any(isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                   and n.func.id == b.name for n in ast.walk(node)):
+                scanned.add(id(node))
+                arity = (len(b.fn_info.pos_params)
+                         if b.fn_info is not None else None)
+                scan = _DonationScan(ctx, b.name, b.donate_argnums, arity)
+                scan.block(node.body)
+                out.extend(scan.findings)
+    return out

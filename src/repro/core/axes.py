@@ -202,5 +202,10 @@ def axis_default(axis: Axis, plan) -> float:
 
 def encode_axis_value(name: str, v):
     """Encode one user-facing axis value to its numeric sweep code."""
-    axis = AXIS_BY_NAME[name]
+    try:
+        axis = AXIS_BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown axis {name!r}; registered axes: "
+            f"{sorted(AXIS_BY_NAME)}") from None
     return axis.encode(v) if axis.encode is not None else v

@@ -65,6 +65,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -541,10 +542,7 @@ def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                         out_specs={key: _BATCH_SPEC
                                    for key in partial_keys})
 
-    def superchunk(c0, low, hi, c_hi, tables, bank_arrays, state):
-        table2 = jnp.transpose(tables, (1, 0, 2)).reshape(
-            tables.shape[1], -1).astype(jnp.float32)
-
+    def superchunk(c0, low, hi, c_hi, table2, bank_arrays, state):
         def body(st, c):
             vi = c // cpv
             r = c - vi * cpv
@@ -564,9 +562,21 @@ def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     return superchunk, out_keys
 
 
+def _fused_table2(tables):
+    """Pre-transpose the axis-value tables into the megakernel's
+    ``(n_axes, n_variants * lmax)`` f32 bank layout.
+
+    Done once per sweep on the host side: the layout is
+    dispatch-invariant, so recomputing it inside the jitted superchunk
+    would re-run the transpose/reshape/cast on every dispatch.
+    """
+    return jnp.transpose(tables, (1, 0, 2)).reshape(
+        tables.shape[1], -1).astype(jnp.float32)
+
+
 def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                 block_points: int, shape: Tuple[int, ...], n_var: int,
-                lmax: int, idx_dtype, tables, s_len: int, cpv: int):
+                lmax: int, idx_dtype, table2, s_len: int, cpv: int):
     """The cached superchunk AOT executable for this sweep SHAPE."""
     key = ("fused", _mesh_key(mesh), chunk, metric, k, block_points,
            tuple(bank.dims), tuple(shape), n_var, lmax, s_len, cpv,
@@ -581,12 +591,12 @@ def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
                                 idx_dtype, with_out=False)
     exe = jax.jit(superchunk, donate_argnums=(6,)).lower(
-        zero, zero, zero, zero, tables, bank.arrays, state0).compile(
+        zero, zero, zero, zero, table2, bank.arrays, state0).compile(
         compiler_options=_compiler_opts())
     _STREAM_STATS["step_compiles"] += 1
     # warm the dispatch path on an all-dead superchunk: c_hi=0 turns
     # every scan slot into a limit=0 no-op, leaving the state untouched
-    state0, counts = exe(zero, zero, zero, zero, tables, bank.arrays,
+    state0, counts = exe(zero, zero, zero, zero, table2, bank.arrays,
                          state0)
     jax.block_until_ready(counts)
     entry = (exe, out_keys)
@@ -709,7 +719,6 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
     legacy :class:`StreamResult` (the same object ``ExploreResult``
     wraps) — identical machinery, executables and caches.
     """
-    import warnings
     warnings.warn(
         "repro.core.shard_sweep.sweep_stream() is deprecated; use "
         "repro.explore.explore(DesignSpace(algorithms, grids), "
@@ -836,9 +845,10 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
             n_chunks = max(c_hi - c_lo, 0)
             s_len = (max(1, int(superchunk)) if superchunk
                      else min(max(n_chunks, 1), _DEFAULT_SUPERCHUNK))
+            table2 = _fused_table2(tables)
             exe, out_keys = _fused_exec(
                 bank, mesh, metric, k, chunk, block_points,
-                vgrids[0].shape, n_var, lmax, idx_dtype, tables, s_len,
+                vgrids[0].shape, n_var, lmax, idx_dtype, table2, s_len,
                 cpv)
             state = _init_banked_state(k, len(out_keys), n_variants,
                                        idx_dtype, with_out=False)
@@ -850,7 +860,7 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
             inflight: List = []
             for d0 in range(c_lo, c_hi, s_len):
                 state, counts = exe(dev(d0), lo_dev, hi_dev, chi_dev,
-                                    tables, bank.arrays, state)
+                                    table2, bank.arrays, state)
                 dispatches += 1
                 dispatched_points += s_len * chunk
                 # pace on the counts partial so upcoming dispatches

@@ -360,11 +360,16 @@ def scalar_point(algorithm: str, variant: str, *,
     evaluators are each other's parity oracle (``engine="staged"`` vs
     ``engine="fused"`` vs the per-plan path, tests/test_explore.py).
     """
-    if vdd_scale != 1.0 or (adc_bits is not None and adc_bits >= 0):
+    off_default = []
+    if vdd_scale != 1.0:
+        off_default.append(f"vdd_scale={vdd_scale!r}")
+    if adc_bits is not None and adc_bits >= 0:
+        off_default.append(f"adc_bits={adc_bits!r}")
+    if off_default:
         raise NotImplementedError(
-            "the scalar oracle does not model the vdd_scale / adc_bits "
-            "coefficient hooks; validate those axes against "
-            "explore(..., engine='staged')")
+            "the scalar oracle does not model the coefficient-hook "
+            f"axes ({', '.join(off_default)} off default); validate "
+            "those axes against explore(..., engine='staged')")
     hw, stages, mapping, _meta = build_variant(
         algorithm, variant, cis_node=int(cis_node), soc_node=int(soc_node))
     if frame_rate is not None:

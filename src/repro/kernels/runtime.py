@@ -5,12 +5,22 @@ Pallas kernels compile to Mosaic only on TPU backends; everywhere else
 interpreter.  Kernels take ``interpret=None`` and resolve it here at trace
 time, so the default is "compiled on TPU, interpreted elsewhere" without
 any call site hardcoding a mode.
+
+The ``REPRO_KERNEL_INTERPRET`` environment variable overrides the
+``interpret=None`` auto policy without touching call sites — ``1`` forces
+the interpreter, ``0`` forces compiled kernels, ``auto`` (or unset) keeps
+the backend-based default.  An explicit ``interpret=`` argument always
+wins over the environment.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
+
+_ENV_VAR = "REPRO_KERNEL_INTERPRET"
+_ENV_VALUES = ("0", "1", "auto")
 
 _BACKEND_IS_TPU: Optional[bool] = None
 
@@ -22,13 +32,30 @@ def on_tpu() -> bool:
     return _BACKEND_IS_TPU
 
 
+def _env_override() -> Optional[bool]:
+    raw = os.environ.get(_ENV_VAR)
+    if raw is None:
+        return None
+    value = raw.strip().lower()
+    if value == "auto" or value == "":
+        return None
+    if value in ("0", "1"):
+        return value == "1"
+    raise ValueError(
+        f"invalid {_ENV_VAR}={raw!r}; valid values: {list(_ENV_VALUES)}")
+
+
 def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """None -> auto (interpret everywhere except TPU); bool -> as given."""
+    """None -> auto (interpret everywhere except TPU, overridable via
+    ``REPRO_KERNEL_INTERPRET``); bool -> as given."""
     if interpret is None:
+        env = _env_override()
+        if env is not None:
+            return env
         return not on_tpu()
     return bool(interpret)
 
 
 def kernel_mode() -> str:
     """Human-readable mode tag for benchmark output."""
-    return "compiled" if on_tpu() else "interpret"
+    return "interpret" if resolve_interpret(None) else "compiled"

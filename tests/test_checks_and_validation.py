@@ -182,3 +182,53 @@ def test_finding3_mixed_signal_saves(edgaze_rows):
     s130 = 1 - find_row(edgaze_rows, "2d_in_mixed", 130)["total_uj"] / \
         find_row(edgaze_rows, "2d_in", 130)["total_uj"]
     assert s65 > s130
+
+
+# ---------------------------------------------------------------------------
+# axis-registry error paths (repro.core.axes)
+# ---------------------------------------------------------------------------
+def test_encode_axis_value_unknown_axis_lists_registered():
+    from repro.core.axes import AXIS_BY_NAME, encode_axis_value
+
+    with pytest.raises(KeyError) as ei:
+        encode_axis_value("frame_rte", 30)
+    msg = str(ei.value)
+    assert "frame_rte" in msg
+    for name in AXIS_BY_NAME:
+        assert name in msg
+
+
+def test_encode_axis_value_known_axes_roundtrip():
+    from repro.core.axes import TECH_INDEX, encode_axis_value
+
+    assert encode_axis_value("frame_rate", 30) == 30
+    assert encode_axis_value("mem_tech", "stt") == TECH_INDEX["stt"]
+
+
+def test_tech_code_unknown_technology_lists_valid():
+    from repro.core.axes import TECH_INDEX, _tech_code
+
+    with pytest.raises(KeyError) as ei:
+        _tech_code("dram")
+    msg = str(ei.value)
+    assert "dram" in msg and "declared" in msg
+    for name in TECH_INDEX:
+        assert name in msg
+
+
+def test_scalar_point_off_default_hooks_name_the_axis():
+    from repro.core.sweep import scalar_point
+
+    with pytest.raises(NotImplementedError) as ei:
+        scalar_point("edgaze", "2d_in", vdd_scale=0.9)
+    assert "vdd_scale=0.9" in str(ei.value)
+    assert "adc_bits" not in str(ei.value)
+
+    with pytest.raises(NotImplementedError) as ei:
+        scalar_point("edgaze", "2d_in", adc_bits=10)
+    assert "adc_bits=10" in str(ei.value)
+
+    with pytest.raises(NotImplementedError) as ei:
+        scalar_point("edgaze", "2d_in", vdd_scale=0.8, adc_bits=12)
+    msg = str(ei.value)
+    assert "vdd_scale=0.8" in msg and "adc_bits=12" in msg

@@ -390,3 +390,24 @@ def test_public_api_surface_pinned():
                     if not name.startswith("_")
                     and not inspect.ismodule(getattr(ex, name)))
     assert public == golden, public
+
+
+def test_shim_warnings_point_at_caller():
+    """stacklevel contract: the shims' DeprecationWarning must attribute
+    to the CALLER's file (this test), not to repro internals — otherwise
+    downstream `-W error::DeprecationWarning` filters by module can't
+    target their own call sites."""
+    from repro.core.shard_sweep import sweep_stream
+    from repro.core.sweep import sweep
+
+    grids = {"frame_rate": [30, 60]}
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always", DeprecationWarning)
+        sweep("edgaze", grids)
+        sweep_stream("edgaze", grids, chunk_size=2, k=2)
+    shim_warnings = [w for w in rec
+                     if issubclass(w.category, DeprecationWarning)
+                     and "is deprecated" in str(w.message)]
+    assert len(shim_warnings) == 2
+    for w in shim_warnings:
+        assert w.filename == __file__, (w.filename, w.lineno)

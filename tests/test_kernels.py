@@ -97,3 +97,53 @@ def test_flash_attention_block_invariance():
     a = ops.flash_attention(q, k, v, bq=32, bk=32)
     b = ops.flash_attention(q, k, v, bq=128, bk=64)
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# REPRO_KERNEL_INTERPRET env override (kernels/runtime.py)
+# ---------------------------------------------------------------------------
+def test_interpret_env_override(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert runtime.resolve_interpret(None) is True
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert runtime.resolve_interpret(None) is False
+    # auto / unset fall back to the backend-based policy
+    auto = not runtime.on_tpu()
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "auto")
+    assert runtime.resolve_interpret(None) is auto
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET")
+    assert runtime.resolve_interpret(None) is auto
+
+
+def test_interpret_env_never_beats_explicit_argument(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert runtime.resolve_interpret(True) is True
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert runtime.resolve_interpret(False) is False
+
+
+def test_interpret_env_invalid_value_raises(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "yes")
+    with pytest.raises(ValueError) as ei:
+        runtime.resolve_interpret(None)
+    msg = str(ei.value)
+    assert "REPRO_KERNEL_INTERPRET" in msg and "'yes'" in msg
+    for valid in ("0", "1", "auto"):
+        assert valid in msg
+    # explicit arguments bypass the env entirely, so they still work
+    assert runtime.resolve_interpret(True) is True
+
+
+def test_kernel_mode_tracks_env_override(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert runtime.kernel_mode() == "compiled"
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert runtime.kernel_mode() == "interpret"
