@@ -3,8 +3,11 @@
 Compares the LATEST ``mega_sweep`` row of ``BENCH_history.jsonl``
 (appended by the ``python benchmarks/run.py mega_sweep`` step that CI
 just ran) against a baseline built from the preceding COMPARABLE rows —
-same schema, point count, device lanes and host cpu count, so a grid
-change or a differently-sized runner never masquerades as a regression.
+same schema, point count, device lanes, host cpu count, sweep backend,
+kernel mode and host-tuning state, so a grid change, a differently-sized
+runner, or an XLA-lane row judged against a Pallas-interpret baseline
+(or a tcmalloc-tuned row against an untuned one) never masquerades as a
+regression or masks one.
 The baseline is the median of up to ``--window`` prior comparable rows
 (noise tolerance: one slow historical run cannot poison the bar, one
 fast outlier cannot raise it), and the tolerance is a further 30%
@@ -28,8 +31,13 @@ from run import HISTORY, HISTORY_SCHEMA, read_history
 
 #: the throughput metrics the guard watches (``mega_points_per_sec_*``)
 METRICS = ("mega_points_per_sec_1dev", "mega_points_per_sec_8dev")
-#: row keys that must match for two runs to be comparable
-COMPARABLE = ("schema", "bench", "mega_n_points", "devices", "cpus")
+#: row keys that must match for two runs to be comparable; backend /
+#: kernel_mode / tuned_host keep execution lanes apart (pre-backend rows
+#: lack the keys, so they compare as a distinct — legacy — lane), and
+#: cpus keeps differently-sized hosts apart (the history already holds
+#: mega_sweep rows mixing cpus: 2 and cpus: 1)
+COMPARABLE = ("schema", "bench", "mega_n_points", "devices", "cpus",
+              "backend", "kernel_mode", "tuned_host")
 
 
 def comparable(a: dict, b: dict) -> bool:

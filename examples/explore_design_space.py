@@ -122,11 +122,19 @@ def main():
     # ONE call, ONE executable, O(1) dispatches: all 8 Ed-Gaze + Rhythmic
     # variants ride a shared PlanBank; each dispatch scans `superchunk`
     # chunks inside the executable and each chunk runs the fused
-    # decode->evaluate->reduce megakernel
-    s = explore(mega_space, engine="fused",
+    # decode->evaluate->reduce megakernel.  backend= picks the megakernel
+    # lane: "pallas" (pallas_call; Mosaic-compiled on TPU, interpreted
+    # elsewhere), "xla" (pure-jnp twin, XLA-compiled natively on any
+    # platform) or "auto" (the default: Pallas on TPU, XLA elsewhere —
+    # off-TPU the interpreter is pure overhead).  REPRO_SWEEP_BACKEND=
+    # overrides "auto" from the environment; both lanes agree with the
+    # staged/monolithic oracles at rel 1e-6.
+    s = explore(mega_space, engine="fused", backend="auto",
                 chunk_size=1 << 17 if mega else 1 << 14, k=6)
     print(f"\n=== Streaming mega-sweep: {s.n_points:,} points x "
           f"{s.n_variants} variants over {s.n_devices} device(s) ===")
+    print(f"backend {s.backend} (kernel_mode="
+          f"{s.stream_result.kernel_mode}), {s.dispatches} dispatch(es)")
     print(f"compile {s.compile_s:.1f}s ONCE "
           f"({s.cache['stream']['step_compiles']} executables cached) vs "
           f"eval {s.eval_s:.1f}s warm -> {s.points_per_sec:,.0f} points/s")

@@ -9,8 +9,9 @@ Three layers:
   enclosing-function chain, so closures and locally-defined scan bodies
   resolve;
 * :class:`TaintEngine` — discovers *hot roots* (functions handed to
-  ``jax.jit`` / ``jax.vmap`` / ``lax.scan`` / ``shard_map`` /
-  ``pl.pallas_call``, via call or decorator, including
+  ``jax.jit`` / ``jax.vmap`` / ``lax.scan`` / ``lax.cond`` /
+  ``lax.switch`` / ``lax.while_loop`` / ``lax.fori_loop`` /
+  ``shard_map`` / ``pl.pallas_call``, via call or decorator, including
   ``functools.partial`` wrappers), taints their traced parameters, and
   propagates taint through assignments, local calls (union over call
   sites, iterated to a fixed point) and closure reads.  While walking it
@@ -345,6 +346,35 @@ class TaintEngine:
             info, bound = self._resolve_fn(call.args[0], within)
             if info is not None:
                 self._mark_root(info, info.pos_params[bound:], "scan")
+        elif fname == "jax.lax.cond" and len(call.args) >= 3:
+            # both branch callables trace inside the caller's staging
+            # context: a host sync in EITHER is a host sync in the hot
+            # path, even in the branch that rarely runs
+            for branch in call.args[1:3]:
+                info, bound = self._resolve_fn(branch, within)
+                if info is not None:
+                    self._mark_root(info, info.pos_params[bound:], "cond")
+        elif fname == "jax.lax.switch" and len(call.args) >= 2:
+            branches = call.args[1]
+            elts = (branches.elts
+                    if isinstance(branches, (ast.List, ast.Tuple))
+                    else [branches])
+            for branch in elts:
+                info, bound = self._resolve_fn(branch, within)
+                if info is not None:
+                    self._mark_root(info, info.pos_params[bound:],
+                                    "switch")
+        elif fname == "jax.lax.while_loop" and len(call.args) >= 2:
+            for fnode in call.args[:2]:
+                info, bound = self._resolve_fn(fnode, within)
+                if info is not None:
+                    self._mark_root(info, info.pos_params[bound:],
+                                    "while_loop")
+        elif fname == "jax.lax.fori_loop" and len(call.args) >= 3:
+            info, bound = self._resolve_fn(call.args[2], within)
+            if info is not None:
+                self._mark_root(info, info.pos_params[bound:],
+                                "fori_loop")
         elif fname == "jax.vmap" and call.args:
             info, bound = self._resolve_fn(call.args[0], within)
             if info is not None:

@@ -2,7 +2,8 @@
 
 All five rules share one :class:`~repro.analysis.astutil.TaintEngine`
 run per module (cached on the context): functions reachable from
-``jax.jit`` / ``lax.scan`` / ``vmap`` / ``shard_map`` /
+``jax.jit`` / ``lax.scan`` / ``lax.cond`` (and the other structured
+control-flow combinators) / ``vmap`` / ``shard_map`` /
 ``pl.pallas_call`` have their traced parameters tainted, taint is
 propagated to a fixed point, and the engine records host syncs, tracer
 branching and kernel-body array construction as events.  The rules here

@@ -25,7 +25,13 @@ Manifest schema (``"schema": 1``)::
       "space_signature": <sha256>,      # canonical resolved-space hash
       "bank_signature": <sha256>,       # PlanBank dims + column layout
       "sweep": {"k", "metric", "engine", "chunk_size", "superchunk",
-                "block_points"},        # per-shard explore() arguments
+                "block_points",
+                "backend"},             # per-shard sweep arguments; the
+                                        # RESOLVED backend ("pallas" /
+                                        # "xla") — resume refuses an
+                                        # explicit cross-backend request
+                                        # (absent in pre-backend
+                                        # manifests: implies "pallas")
       "n_points": <int>,                # variant-major flat-space size
       "shards": [{"id", "lo", "hi"}, ...]   # the deterministic plan
     }
@@ -277,13 +283,21 @@ def shard_path(directory: str, lo: int, hi: int,
 
 def write_shard(directory: str, lo: int, hi: int, result_payload: Dict,
                 *, attempts: int = 1, splits: int = 0) -> str:
-    """Atomically checkpoint one completed shard (checksummed)."""
+    """Atomically checkpoint one completed shard (checksummed).
+
+    Written compact (``indent=None``): both the checksum's canonical
+    form and the file body then take json's C-accelerated encoder, and
+    the key ORDER of the payload survives the write -> read round trip
+    (merge compares variant-label order across shards, so a sorted-key
+    on-disk form would make loaded and fresh shards disagree).
+    """
     body = {"shard": {"lo": int(lo), "hi": int(hi),
                       "attempts": int(attempts), "splits": int(splits)},
             "result": result_payload}
     payload = {"schema": MANIFEST_SCHEMA,
                "checksum": payload_checksum(body), **body}
-    return atomic_write_json(shard_path(directory, lo, hi), payload)
+    return atomic_write_json(shard_path(directory, lo, hi), payload,
+                             indent=None)
 
 
 def read_shard(path: str) -> Dict:

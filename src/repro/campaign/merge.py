@@ -136,4 +136,5 @@ def merge_stream_results(shards: Sequence[StreamResult], *,
         dispatches=sum(s.dispatches for s in shards),
         superchunk=max(s.superchunk for s in shards),
         occupancy=(n_points / dispatched) if dispatched else 1.0,
-        n_var=n_var)
+        n_var=n_var, backend=first.backend,
+        kernel_mode=first.kernel_mode)

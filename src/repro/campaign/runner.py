@@ -37,11 +37,14 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..ckpt import atomic_write_json
-from ..core.shard_sweep import _DEFAULT_SUPERCHUNK, StreamResult
+from ..core.shard_sweep import (_DEFAULT_SUPERCHUNK, StreamResult,
+                                _prepare_stream, _stream_impl)
+from ..kernels.runtime import explicit_backend, resolve_backend
 from .faults import FaultSchedule, ShardTimeout, classify_failure
 from .manifest import (REPORT_NAME, CampaignIntegrityError,
-                       CampaignManifest, completed_shards, missing_ranges,
-                       read_shard, shard_path, write_shard)
+                       CampaignManifest, CampaignMismatchError,
+                       completed_shards, missing_ranges, read_shard,
+                       shard_path, write_shard)
 from .merge import merge_stream_results, merged_coverage
 
 _DEFAULT_CHUNK = 1 << 18
@@ -71,18 +74,28 @@ class CampaignOptions:
 
 
 def _dispatch(space, lo: int, hi: int, sweep: Dict, mesh,
-              timeout_s: Optional[float]) -> StreamResult:
-    """Run one shard's sweep, optionally under a wall-clock budget."""
-    from ..explore import explore
+              timeout_s: Optional[float], prep=None) -> StreamResult:
+    """Run one shard's sweep, optionally under a wall-clock budget.
 
+    Goes straight to ``_stream_impl`` (the space was validated when the
+    manifest was planned) with the campaign's shared ``_StreamPrep``, so
+    a shard dispatch does no variant re-lowering, bank rebuild or table
+    transpose — with the warm executable cached, per-shard fixed cost is
+    O(k) finalization only.  Legacy manifests without a recorded
+    ``backend`` dispatch on "pallas" (the only lane that existed when
+    they were planned), keeping resumed merges bit-compatible with
+    their checkpointed shards.
+    """
     def run() -> StreamResult:
-        res = explore(space, k=int(sweep["k"]), metric=sweep["metric"],
-                      engine=sweep["engine"],
-                      chunk_size=int(sweep["chunk_size"]), mesh=mesh,
-                      block_points=int(sweep["block_points"]),
-                      index_range=(lo, hi),
-                      superchunk=int(sweep["superchunk"]))
-        return res.stream_result
+        return _stream_impl(
+            list(space.algorithms), space.grids, soc_node=space.soc_node,
+            chunk_size=int(sweep["chunk_size"]), metric=sweep["metric"],
+            k=int(sweep["k"]), mesh=mesh,
+            block_points=int(sweep["block_points"]),
+            index_range=(lo, hi), engine=sweep["engine"],
+            superchunk=int(sweep["superchunk"]),
+            backend=sweep.get("backend") or "pallas",
+            _prepared=prep)
 
     if timeout_s is None:
         return run()
@@ -114,6 +127,7 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
                  chunk_size: Optional[int] = None,
                  superchunk: Optional[int] = None,
                  block_points: int = 4096, mesh=None,
+                 backend: str = "auto",
                  options: Optional[CampaignOptions] = None,
                  on_corrupt: str = "refuse"):
     """Run (or resume) a durable sharded sweep campaign.
@@ -125,7 +139,12 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
     dispatching anything; a partial one dispatches only the missing
     index ranges.  Sweep parameters (``k``/``metric``/``engine``/...)
     are recorded in the manifest on first run and REUSED on resume —
-    changing them mid-campaign would make shards unmergeable.
+    changing them mid-campaign would make shards unmergeable.  The
+    resolved execution ``backend`` ("pallas"/"xla") is likewise
+    recorded: a resume under an explicitly different backend (argument
+    or ``REPRO_SWEEP_BACKEND``) raises :class:`CampaignMismatchError`
+    instead of silently merging shards computed by different
+    executables; ``backend="auto"`` on resume reuses the recorded lane.
 
     ``on_corrupt``: ``'refuse'`` (default) raises
     :class:`CampaignIntegrityError` on a checksum-failing shard file;
@@ -145,12 +164,35 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
         manifest.verify_space(space)
         manifest.verify_bank(space)
         sweep = manifest.sweep
+        # cross-backend resume refusal: shards checkpointed by one
+        # megakernel lane must not merge with shards computed by the
+        # other (parity is rel 1e-6, but campaign merges are asserted
+        # bit-compatible).  An EXPLICIT request (argument or env) that
+        # contradicts the manifest refuses; "auto" reuses the record.
+        recorded = sweep.get("backend") or "pallas"
+        requested = explicit_backend(backend)
+        if sweep["engine"] == "fused" and requested not in (None, recorded):
+            raise CampaignMismatchError(
+                f"campaign at {checkpoint_dir!r} was recorded with "
+                f"backend={recorded!r} but this resume requests "
+                f"backend={requested!r}; resuming would mix executables "
+                f"across shards — resume with backend='auto'/"
+                f"{recorded!r}, or start a fresh checkpoint_dir")
+        sweep = dict(sweep, backend=recorded)
     else:
         if engine == "auto":
             engine = "fused"
         if engine not in ("fused", "staged"):
             raise ValueError(f"campaigns need a streaming engine ('fused' "
                              f"or 'staged'), got {engine!r}")
+        if engine == "staged":
+            if explicit_backend(backend) == "xla":
+                raise ValueError(
+                    "backend='xla' requires engine='fused'; the staged "
+                    "parity oracle always runs the Pallas pipeline")
+            resolved_backend = "pallas"
+        else:
+            resolved_backend = resolve_backend(backend)
         chunk = int(chunk_size or _DEFAULT_CHUNK)
         sweep = {"k": int(k), "metric": metric, "engine": engine,
                  "chunk_size": chunk,
@@ -159,7 +201,10 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
                  # executable — pinning it keeps the whole campaign
                  # (including OOM half-shards) on ONE step executable
                  "superchunk": int(superchunk or _DEFAULT_SUPERCHUNK),
-                 "block_points": int(block_points)}
+                 "block_points": int(block_points),
+                 # resolved lane, not "auto": the manifest records what
+                 # actually ran so resume can refuse a cross-backend mix
+                 "backend": resolved_backend}
         shard_points = int(opts.shard_points or 4 * chunk)
         manifest = CampaignManifest.create(space, sweep=sweep,
                                            shard_points=shard_points)
@@ -182,6 +227,12 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
                   missing_ranges(manifest.shards, loaded))
 
     # ----- execute --------------------------------------------------------
+    # one lowering/bank/table build for the WHOLE campaign: every shard
+    # (and every OOM half-shard) dispatches against this shared prep —
+    # per-shard fixed cost drops to executable-cache lookup + O(k)
+    # finalization (campaign_overhead_frac in the campaign_sweep bench)
+    prep = (_prepare_stream(list(space.algorithms), space.grids,
+                            soc_node=space.soc_node) if queue else None)
     executed: List[Dict] = []
     quarantined: List[Dict] = []
     n_retries = n_splits = n_completed = 0
@@ -191,7 +242,8 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
             if opts.faults is not None:
                 opts.faults.check(lo, hi, attempt,
                                   n_completed=n_completed)
-            st = _dispatch(space, lo, hi, sweep, mesh, opts.timeout_s)
+            st = _dispatch(space, lo, hi, sweep, mesh, opts.timeout_s,
+                           prep=prep)
         except BaseException as exc:  # noqa: BLE001 - classified below
             kind = classify_failure(exc)
             executed.append({"lo": lo, "hi": hi, "attempt": attempt,
@@ -249,6 +301,7 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
 
 
 def resume(manifest_path: str, *, space=None, mesh=None,
+           backend: str = "auto",
            options: Optional[CampaignOptions] = None,
            on_corrupt: str = "refuse"):
     """Resume a campaign from its manifest (path or directory).
@@ -265,5 +318,5 @@ def resume(manifest_path: str, *, space=None, mesh=None,
     manifest = CampaignManifest.load(manifest_path)
     if space is None:
         space = manifest.rebuild_space()
-    return run_campaign(space, directory, mesh=mesh, options=options,
-                        on_corrupt=on_corrupt)
+    return run_campaign(space, directory, mesh=mesh, backend=backend,
+                        options=options, on_corrupt=on_corrupt)

@@ -1,6 +1,8 @@
 """Fault-tolerant checkpointing."""
-from .manager import (CheckpointManager, atomic_write_json, canonical_json,
-                      payload_checksum, read_json, restore_resharded)
+from .manager import (CheckpointManager, atomic_write_json,
+                      atomic_write_text, canonical_json, payload_checksum,
+                      read_json, restore_resharded)
 
-__all__ = ["CheckpointManager", "atomic_write_json", "canonical_json",
-           "payload_checksum", "read_json", "restore_resharded"]
+__all__ = ["CheckpointManager", "atomic_write_json", "atomic_write_text",
+           "canonical_json", "payload_checksum", "read_json",
+           "restore_resharded"]

@@ -40,8 +40,8 @@ def payload_checksum(obj: Any) -> str:
     return hashlib.sha256(canonical_json(obj).encode()).hexdigest()
 
 
-def atomic_write_json(path: str, obj: Any, *, indent: int = 1) -> str:
-    """Write ``obj`` as JSON via tmp-file + fsync + rename.
+def atomic_write_text(path: str, text: str) -> str:
+    """Write ``text`` via tmp-file + fsync + rename.
 
     Same publish discipline as checkpoint directories: a reader never
     observes a half-written file, and a writer killed mid-write leaves
@@ -50,11 +50,22 @@ def atomic_write_json(path: str, obj: Any, *, indent: int = 1) -> str:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(obj, f, indent=indent)
+        f.write(text)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)          # atomic publish
     return path
+
+
+def atomic_write_json(path: str, obj: Any, *,
+                      indent: Optional[int] = 1) -> str:
+    """Write ``obj`` as JSON with :func:`atomic_write_text` discipline.
+
+    Encodes to a string first (``json.dump``-to-file pins the
+    pure-Python incremental encoder; ``dumps`` takes the C path when it
+    can), then publishes atomically.
+    """
+    return atomic_write_text(path, json.dumps(obj, indent=indent))
 
 
 def read_json(path: str) -> Any:

@@ -76,8 +76,10 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map, x64_context
 from ..kernels.fused_sweep import fused_sweep_block
+from ..kernels.fused_sweep_xla import fused_sweep_block_xla
 from ..kernels.grid_decode import grid_decode
-from ..kernels.runtime import resolve_interpret
+from ..kernels.runtime import (resolve_backend, resolve_interpret,
+                               sweep_kernel_mode)
 from ..kernels.stream_reduce import block_stats
 from ..launch.mesh import make_batch_mesh
 from .batch import (DesignPoints, OUT_KEYS, _hooks_active,
@@ -486,7 +488,8 @@ def _compiler_opts():
 # ---------------------------------------------------------------------------
 def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                 block_points: int, shape: Tuple[int, ...], n_var: int,
-                lmax: int, idx_dtype, s_len: int, cpv: int):
+                lmax: int, idx_dtype, s_len: int, cpv: int,
+                backend: str = "pallas"):
     """Build the (untraced) superchunk scan step + its output key list.
 
     One call evaluates ``s_len`` consecutive chunk ordinals: scan step
@@ -494,22 +497,38 @@ def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     pure index arithmetic on the variant-major flat space (``cpv`` chunk
     ordinals per variant), runs the chunk through the fused megakernel
     shard body, and folds the O(k) partials into the scan-carried banked
-    state.  Ordinals at or past ``c_hi`` collapse to ``limit = 0``
-    no-ops, so the trailing superchunk needs no special-casing.  Only
-    the metric rides the kernel; winners' full output rows are
+    state.  Ordinals at or past ``c_hi`` are skipped by a scalar
+    ``lax.cond`` (the carry passes through untouched — bit-identical to
+    merging an all-masked chunk), so a mostly-dead superchunk costs only
+    its live slots and the trailing superchunk needs no special-casing.
+    Only the metric rides the kernel; winners' full output rows are
     re-gathered by the driver at finalization.
+
+    ``backend`` (already resolved: "pallas" or "xla") picks the fused
+    megakernel implementation — ``pallas_call`` (Mosaic on TPU, Pallas
+    interpreter elsewhere) or the pure-``jnp`` twin XLA compiles
+    natively; both share the exact block reduction contract, so the
+    merge path is backend-independent.
     """
     V = bank.dims.n_variants
     total = V * n_var
     ndev = int(mesh.devices.size)
     assert chunk % ndev == 0, (chunk, ndev)
     shard = chunk // ndev
-    interpret = resolve_interpret(None)
-    # one kernel block per shard on the interpreter (grid steps only add
-    # emulation overhead there); compiled backends tile by block_points
-    bp = shard if interpret else max(min(block_points, shard), 1)
+    if backend == "xla":
+        # XLA fuses across block boundaries itself; bp only bounds the
+        # top_k reduction width.  The jnp lane always uses exact gathers
+        # (the one-hot matmul decode is a Mosaic-only idiom).
+        bp = max(min(block_points, shard), 1)
+        compute = build_coeff_compute(bank.dims, exact=True)
+    else:
+        interpret = resolve_interpret(None)
+        # one kernel block per shard on the interpreter (grid steps only
+        # add emulation overhead there); compiled Mosaic tiles by
+        # block_points
+        bp = shard if interpret else max(min(block_points, shard), 1)
+        compute = build_coeff_compute(bank.dims, exact=interpret)
     kk = min(k, shard)
-    compute = build_coeff_compute(bank.dims, exact=interpret)
     out_keys = list(OUT_KEYS)
     if metric not in out_keys:
         raise KeyError(f"unknown stream metric {metric!r}; valid: "
@@ -518,11 +537,18 @@ def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     def shard_body(start, low, limit, table2, row):
         six = jax.lax.axis_index("batch").astype(idx_dtype)
         s0 = start + six * shard
-        cv, cl, sums, counts = fused_sweep_block(
-            table2, row, s0, low, limit, compute=compute, metric=metric,
-            axis_names=AXES, shape=shape, n_var=n_var, total=total,
-            chunk=shard, lmax=lmax, block_points=bp, kk=kk,
-            idx_dtype=idx_dtype, interpret=interpret)
+        if backend == "xla":
+            cv, cl, sums, counts = fused_sweep_block_xla(
+                table2, row, s0, low, limit, compute=compute,
+                metric=metric, axis_names=tuple(AXES), shape=tuple(shape),
+                n_var=n_var, total=total, chunk=shard, lmax=lmax,
+                block_points=bp, kk=kk, idx_dtype=idx_dtype)
+        else:
+            cv, cl, sums, counts = fused_sweep_block(
+                table2, row, s0, low, limit, compute=compute,
+                metric=metric, axis_names=AXES, shape=shape, n_var=n_var,
+                total=total, chunk=shard, lmax=lmax, block_points=bp,
+                kk=kk, idx_dtype=idx_dtype, interpret=interpret)
         # fold the (G, kk) block candidates to this shard's top-kk
         neg, pos = jax.lax.top_k(-cv.reshape(-1), kk)
         blk = (pos // kk).astype(idx_dtype)
@@ -543,18 +569,29 @@ def _fused_step(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                                    for key in partial_keys})
 
     def superchunk(c0, low, hi, c_hi, table2, bank_arrays, state):
-        def body(st, c):
+        def live(c, st):
             vi = c // cpv
             r = c - vi * cpv
             start = (vi * n_var + r * chunk).astype(idx_dtype)
             limit = jnp.minimum(hi, (vi + 1) * n_var).astype(idx_dtype)
-            limit = jnp.where(c < c_hi, limit, jnp.asarray(0, idx_dtype))
             v = jnp.clip(vi, 0, V - 1).astype(jnp.int32)
             row = jax.lax.dynamic_index_in_dim(
                 bank_arrays["fused"], v, 0, keepdims=True)     # (1, W)
             parts = sharded(start, low, limit, table2, row)
             return (_merge_candidates(parts, v, st, k, False),
                     parts["counts"])
+
+        def dead(c, st):
+            # a dead slot's kernel output is all-masked (+inf candidates,
+            # zero sums/counts) and _merge_candidates is exactly identity
+            # on it, so returning the carry untouched is bit-identical —
+            # the cond makes the scan's fixed s_len cost proportional to
+            # LIVE chunks (campaign shards and index_range tails run the
+            # same pinned executable at a fraction of its scan length)
+            return st, jnp.zeros((ndev,), jnp.float32)
+
+        def body(st, c):
+            return jax.lax.cond(c < c_hi, live, dead, c, st)
 
         cs = c0 + jnp.arange(s_len, dtype=idx_dtype)
         return jax.lax.scan(body, state, cs)
@@ -576,17 +613,24 @@ def _fused_table2(tables):
 
 def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
                 block_points: int, shape: Tuple[int, ...], n_var: int,
-                lmax: int, idx_dtype, table2, s_len: int, cpv: int):
-    """The cached superchunk AOT executable for this sweep SHAPE."""
-    key = ("fused", _mesh_key(mesh), chunk, metric, k, block_points,
-           tuple(bank.dims), tuple(shape), n_var, lmax, s_len, cpv,
-           jnp.dtype(idx_dtype).name)
+                lmax: int, idx_dtype, table2, s_len: int, cpv: int,
+                backend: str = "pallas"):
+    """The cached superchunk AOT executable for this sweep SHAPE.
+
+    ``backend`` joins the cache key: the Pallas and XLA lanes are
+    distinct executables (one each — the per-backend one-executable
+    invariant is asserted in tests/test_fused_sweep.py).
+    """
+    key = ("fused", backend, _mesh_key(mesh), chunk, metric, k,
+           block_points, tuple(bank.dims), tuple(shape), n_var, lmax,
+           s_len, cpv, jnp.dtype(idx_dtype).name)
     hit = _cache_get(key)
     if hit is not None:
         return hit
     superchunk, out_keys = _fused_step(bank, mesh, metric, k, chunk,
                                        block_points, shape, n_var, lmax,
-                                       idx_dtype, s_len, cpv)
+                                       idx_dtype, s_len, cpv,
+                                       backend=backend)
     zero = jnp.asarray(0, idx_dtype)
     state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
                                 idx_dtype, with_out=False)
@@ -602,6 +646,67 @@ def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     entry = (exe, out_keys)
     _cache_put(key, entry)
     return entry
+
+
+@dataclasses.dataclass
+class _StreamPrep:
+    """Lowered, device-resident sweep inputs shared across dispatches.
+
+    Everything here is a pure function of ``(algorithms, grids,
+    soc_node)`` and — being all-f32 / host metadata — independent of the
+    scoped x64 context, so one prep serves every ``index_range`` shard
+    of a campaign: the campaign runner builds it ONCE and threads it
+    through ``_stream_impl(_prepared=...)``, hoisting the per-shard
+    variant re-lowering, bank rebuild and table transpose out of the
+    shard loop (they dominated campaign fixed overhead).  Read-only
+    after construction (thread-safe to share).
+    """
+    algos: List[str]
+    labels: List[str]
+    valgos: List[str]
+    vnames: List[str]
+    plans: List[EnergyPlan]
+    vgrids: List
+    n_var: int
+    n_variants: int
+    total: int
+    tables: jnp.ndarray          # (V, n_axes, Lmax) f32 axis-value bank
+    bank: PlanBank
+    lmax: int
+    table2: jnp.ndarray          # (n_axes, V * Lmax) megakernel layout
+
+
+def _prepare_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
+                    grids: Optional[Dict[str, Sequence]] = None, *,
+                    soc_node: int = 22) -> _StreamPrep:
+    """Resolve + lower a sweep's variant set once (see _StreamPrep)."""
+    algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
+    labels: List[str] = []
+    valgos: List[str] = []
+    vnames: List[str] = []
+    plans: List[EnergyPlan] = []
+    vgrids: List = []
+    for algo in algos:
+        variants, ngrids = _normalize_grids(algo, grids)
+        for variant in variants:
+            plans.append(lower_variant(algo, variant, soc_node=soc_node))
+            labels.append(variant if len(algos) == 1
+                          else f"{algo}/{variant}")
+            valgos.append(algo)
+            vnames.append(variant)
+            vgrids.append(variant_grid(plans[-1], ngrids))
+    if not all(g.shape == vgrids[0].shape for g in vgrids):
+        raise ValueError(f"variant grids disagree on shape: "
+                         f"{[g.shape for g in vgrids]}")
+    n_var = len(vgrids[0])
+    n_variants = len(plans)
+    tables = jnp.asarray(axis_tables(vgrids))
+    return _StreamPrep(
+        algos=algos, labels=labels, valgos=valgos, vnames=vnames,
+        plans=plans, vgrids=vgrids, n_var=n_var, n_variants=n_variants,
+        total=n_variants * n_var, tables=tables,
+        bank=build_plan_bank(plans), lmax=int(tables.shape[2]),
+        table2=_fused_table2(tables))
 
 
 def best_by_algorithm_summaries(summaries: Dict[str, Dict],
@@ -660,13 +765,23 @@ class StreamResult:
     superchunk: int = 1
     occupancy: float = 1.0
     n_var: int = 0          # points per variant (flat = slot*n_var + local)
+    #: resolved execution backend ("pallas" or "xla") and its kernel mode
+    #: tag ("interpret" / "compiled" / "xla") — bench + campaign columns
+    backend: str = "pallas"
+    kernel_mode: str = ""
 
     def to_payload(self) -> Dict:
         """JSON-serializable form (the campaign shard-checkpoint body).
 
         Pure-Python scalars/lists only; ``from_payload`` round-trips it
-        bit-exactly (floats survive via repr round-trip)."""
-        out = dataclasses.asdict(self)
+        bit-exactly (floats survive via repr round-trip).  Built by
+        shallow field iteration, not ``dataclasses.asdict`` — every field
+        is already a JSON-safe scalar or a dict/list of them, and the
+        asdict deep-copy recursion was a measurable per-shard cost in
+        campaign checkpointing; the comprehensions below copy the two
+        container fields so the payload never aliases ``self``."""
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(self)}
         out["topk"] = [dict(r) for r in self.topk]
         out["summaries"] = {
             label: dict(sm, argmin_point=(dict(sm["argmin_point"])
@@ -710,7 +825,8 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
                  progress: Optional[Callable[[int, int], None]] = None,
                  index_range: Optional[Tuple[int, int]] = None,
                  pipeline_depth: int = 4, engine: str = "fused",
-                 superchunk: Optional[int] = None) -> StreamResult:
+                 superchunk: Optional[int] = None,
+                 backend: str = "auto") -> StreamResult:
     """DEPRECATED: use :func:`repro.explore.explore` with a
     :class:`repro.explore.DesignSpace`.
 
@@ -735,7 +851,7 @@ def sweep_stream(algorithm: Union[str, Sequence[str]] = "edgaze",
                   chunk_size=chunk_size, mesh=mesh,
                   block_points=block_points, progress=progress,
                   index_range=index_range, pipeline_depth=pipeline_depth,
-                  superchunk=superchunk)
+                  superchunk=superchunk, backend=backend)
     return res.stream_result
 
 
@@ -747,7 +863,9 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
                  progress: Optional[Callable[[int, int], None]] = None,
                  index_range: Optional[Tuple[int, int]] = None,
                  pipeline_depth: int = 4, engine: str = "fused",
-                 superchunk: Optional[int] = None) -> StreamResult:
+                 superchunk: Optional[int] = None,
+                 backend: str = "auto",
+                 _prepared: Optional[_StreamPrep] = None) -> StreamResult:
     """Stream a cartesian sweep of any size through ONE executable.
 
     Same ``grids`` contract as ``sweep()`` (``variant`` + numeric axes;
@@ -777,38 +895,42 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
     automatically.  ``index_range=(lo, hi)`` streams only that slice of
     the flat index space (multi-host partitioning hook);
     ``progress(done, span)`` fires after every dispatch.
+
+    ``backend`` selects the fused megakernel implementation: "pallas"
+    (``pallas_call``: Mosaic on TPU, interpreter elsewhere), "xla" (the
+    pure-``jnp`` twin XLA compiles natively on any platform) or "auto"
+    (Pallas on TPU, XLA elsewhere; ``REPRO_SWEEP_BACKEND`` overrides).
+    The staged oracle always runs the Pallas pipeline.  ``_prepared``
+    is the campaign runner's hoist hook: a :class:`_StreamPrep` built
+    once for the SAME ``(algorithm, grids, soc_node)`` skips per-call
+    re-lowering (callers are responsible for that match).
     """
     t_start = time.perf_counter()
     if engine not in ("fused", "staged"):
         raise ValueError(f"unknown engine {engine!r}; "
                          f"valid: ['fused', 'staged']")
+    if engine == "staged":
+        if backend not in (None, "auto", "pallas"):
+            raise ValueError(
+                f"backend={backend!r} requires engine='fused'; the "
+                f"staged parity oracle always runs the Pallas pipeline")
+        backend = "pallas"
+    else:
+        backend = resolve_backend(backend)
     if mesh is None:
         mesh = make_batch_mesh()
     ndev = int(mesh.devices.size)
-    algos = [algorithm] if isinstance(algorithm, str) else list(algorithm)
     timings = {"compile_s": 0.0, "eval_s": 0.0}
 
     t0 = time.perf_counter()
-    labels: List[str] = []
-    valgos: List[str] = []
-    vnames: List[str] = []
-    plans: List[EnergyPlan] = []
-    vgrids: List = []
-    for algo in algos:
-        variants, ngrids = _normalize_grids(algo, grids)
-        for variant in variants:
-            plans.append(lower_variant(algo, variant, soc_node=soc_node))
-            labels.append(variant if len(algos) == 1
-                          else f"{algo}/{variant}")
-            valgos.append(algo)
-            vnames.append(variant)
-            vgrids.append(variant_grid(plans[-1], ngrids))
-    if not all(g.shape == vgrids[0].shape for g in vgrids):
-        raise ValueError(f"variant grids disagree on shape: "
-                         f"{[g.shape for g in vgrids]}")
-    n_var = len(vgrids[0])
-    n_variants = len(plans)
-    total = n_variants * n_var
+    prep = (_prepared if _prepared is not None
+            else _prepare_stream(algorithm, grids, soc_node=soc_node))
+    algos = prep.algos
+    labels, valgos, vnames = prep.labels, prep.valgos, prep.vnames
+    plans, vgrids = prep.plans, prep.vgrids
+    n_var = prep.n_var
+    n_variants = prep.n_variants
+    total = prep.total
     # device-divisible chunk, clamped to the per-variant span: chunks are
     # variant-uniform, so any chunk budget beyond one span is masked tail
     # work dispatched on every single chunk of a small-variant sweep
@@ -826,9 +948,9 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
     dispatched_points = 0
     s_len = 1
     with x64_context(wide):
-        tables = jnp.asarray(axis_tables(vgrids))
-        bank = build_plan_bank(plans)
-        lmax = int(tables.shape[2])
+        # tables/bank/table2 are all-f32 (x64-independent), built once in
+        # the prep — inside the context only INDEX arrays widen
+        tables, bank, lmax = prep.tables, prep.bank, prep.lmax
 
         if engine == "fused":
             # chunk ordinals: cpv chunk slots per variant, covering the
@@ -845,11 +967,11 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
             n_chunks = max(c_hi - c_lo, 0)
             s_len = (max(1, int(superchunk)) if superchunk
                      else min(max(n_chunks, 1), _DEFAULT_SUPERCHUNK))
-            table2 = _fused_table2(tables)
+            table2 = prep.table2
             exe, out_keys = _fused_exec(
                 bank, mesh, metric, k, chunk, block_points,
                 vgrids[0].shape, n_var, lmax, idx_dtype, table2, s_len,
-                cpv)
+                cpv, backend=backend)
             state = _init_banked_state(k, len(out_keys), n_variants,
                                        idx_dtype, with_out=False)
             timings["compile_s"] += time.perf_counter() - t0
@@ -974,4 +1096,5 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
         engine=engine, dispatches=dispatches, superchunk=s_len,
         occupancy=((hi - lo) / dispatched_points if dispatched_points
                    else 1.0),
-        n_var=n_var)
+        n_var=n_var, backend=backend,
+        kernel_mode=sweep_kernel_mode(backend))

@@ -89,6 +89,9 @@ class ExploreResult:
     #: campaign report dict (shards executed / retried / quarantined,
     #: coverage) when the result came from a checkpointed campaign run
     campaign: Optional[Dict] = None
+    #: resolved streaming execution backend ("pallas" / "xla"); None for
+    #: the grid engines, which have no megakernel lane
+    backend: Optional[str] = None
 
     def __len__(self) -> int:
         return self.n_points
@@ -235,7 +238,7 @@ def _stream_to_explore(space: DesignSpace, st: StreamResult, *,
         compile_s=st.compile_s, eval_s=st.eval_s,
         dispatches=st.dispatches, superchunk=st.superchunk,
         occupancy=st.occupancy, cache=_cache_snapshot(),
-        stream_result=st, campaign=campaign)
+        stream_result=st, campaign=campaign, backend=st.backend)
 
 
 def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
@@ -244,7 +247,7 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
             progress: Optional[Callable[[int, int], None]] = None,
             index_range: Optional[Tuple[int, int]] = None,
             pipeline_depth: int = 4, superchunk: Optional[int] = None,
-            checkpoint_dir: Optional[str] = None,
+            backend: str = "auto", checkpoint_dir: Optional[str] = None,
             campaign=None) -> ExploreResult:
     """Score a :class:`DesignSpace`; one entry point for every engine.
 
@@ -258,6 +261,15 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     scalar oracle.  ``index_range`` / ``progress`` / ``superchunk`` /
     ``pipeline_depth`` / ``block_points`` tune the streaming engines
     (``index_range`` is the multi-host partitioning hook).
+
+    ``backend`` selects the fused megakernel implementation: ``"pallas"``
+    (``pallas_call`` — Mosaic-compiled on TPU, interpreted elsewhere),
+    ``"xla"`` (the pure-``jnp`` twin XLA compiles natively on any
+    platform), or ``"auto"`` (default: Pallas on TPU, XLA elsewhere; the
+    ``REPRO_SWEEP_BACKEND`` environment variable overrides the auto
+    policy, mirroring ``REPRO_KERNEL_INTERPRET``).  The resolved lane is
+    reported on ``result.backend`` and recorded in campaign manifests —
+    a campaign refuses to resume under a different backend.
 
     ``checkpoint_dir`` makes the call a durable CAMPAIGN: the sweep is
     sharded, each shard checkpointed with retry/split/quarantine fault
@@ -290,7 +302,7 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
                             engine=engine, chunk_size=chunk_size,
                             superchunk=superchunk,
                             block_points=block_points, mesh=mesh,
-                            options=campaign)
+                            backend=backend, options=campaign)
     engine = _resolve_engine(engine, space, chunk_size, index_range)
 
     if engine in ("monolithic", "chunked"):
@@ -298,7 +310,8 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
                                    ("progress", progress, None),
                                    ("superchunk", superchunk, None),
                                    ("block_points", block_points, 4096),
-                                   ("pipeline_depth", pipeline_depth, 4)):
+                                   ("pipeline_depth", pipeline_depth, 4),
+                                   ("backend", backend, "auto")):
             if val != default:
                 raise ValueError(f"{name}= requires a streaming engine "
                                  f"('fused' or 'staged'), not {engine!r}")
@@ -316,6 +329,6 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
         chunk_size=chunk_size or _DEFAULT_CHUNK, metric=metric, k=k,
         mesh=mesh, block_points=block_points, progress=progress,
         index_range=index_range, pipeline_depth=pipeline_depth,
-        engine=engine, superchunk=superchunk)
+        engine=engine, superchunk=superchunk, backend=backend)
     return _stream_to_explore(space, st,
                               wall_s=time.perf_counter() - t0)

@@ -3,6 +3,9 @@
 Sensor side (the paper's stencil workloads): binning, stencil_conv,
 frame_event.  LM side: matmul (MXU-tiled), flash_attention (online softmax,
 GQA-aware).  ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles.
+The fused sweep megakernel ships in two backends: ``fused_sweep`` (Pallas)
+and ``fused_sweep_xla`` (pure-jnp twin, XLA-compiled on any platform),
+selected per sweep via ``runtime.resolve_backend``.
 """
 from . import ops, ref
 from .binning import binning
@@ -10,14 +13,19 @@ from .category_reduce import category_reduce
 from .flash_attention import flash_attention
 from .frame_event import frame_event
 from .fused_sweep import fused_sweep_block
+from .fused_sweep_xla import fused_sweep_block_xla
 from .grid_decode import decode_axis_values, grid_decode, grid_strides
 from .matmul import matmul
-from .runtime import kernel_mode, on_tpu, resolve_interpret
+from .runtime import (SWEEP_BACKENDS, explicit_backend, kernel_mode,
+                      on_tpu, reset_backend_cache, resolve_backend,
+                      resolve_interpret, sweep_kernel_mode)
 from .stencil_conv import stencil_conv
 from .stream_reduce import block_stats, block_stats_banked, masked_stats
 
 __all__ = ["ops", "ref", "binning", "block_stats", "block_stats_banked",
            "category_reduce", "decode_axis_values", "flash_attention",
-           "frame_event", "fused_sweep_block", "grid_decode",
-           "grid_strides", "kernel_mode", "masked_stats", "matmul",
-           "on_tpu", "resolve_interpret", "stencil_conv"]
+           "frame_event", "fused_sweep_block", "fused_sweep_block_xla",
+           "explicit_backend", "grid_decode", "grid_strides",
+           "kernel_mode", "masked_stats", "matmul", "on_tpu",
+           "reset_backend_cache", "resolve_backend", "resolve_interpret",
+           "stencil_conv", "sweep_kernel_mode", "SWEEP_BACKENDS"]

@@ -1,11 +1,15 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from ..kernels.runtime import reset_backend_cache
+reset_backend_cache()   # platform set changed: drop any memoized probe
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST stay the first statements of this module — jax
-locks the device count at first initialization, and the production meshes
-need 512 placeholder host devices.
+The env assignment above MUST stay the first statement of this module —
+jax locks the device count at first initialization, and the production
+meshes need 512 placeholder host devices.  The backend-probe reset keeps
+any earlier import's memoized platform answer from leaking past the
+forced device count.
 
 Per cell this harness produces:
   * feasibility proof: full-depth scanned step compiles on the mesh;

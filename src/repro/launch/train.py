@@ -43,6 +43,10 @@ def main():
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
+        # the platform set just changed: drop any backend probe memoized
+        # by an earlier import (embedding processes, test harnesses)
+        from ..kernels.runtime import reset_backend_cache
+        reset_backend_cache()
 
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P

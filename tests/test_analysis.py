@@ -121,6 +121,29 @@ def test_mutated_scan_body_item_is_flagged(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# mutation: .item() inside the XLA fused lane's reduction -> hot-host-sync
+# ---------------------------------------------------------------------------
+def test_mutated_xla_lane_item_is_flagged(tmp_path):
+    """fused_sweep_block_xla is jit-decorated, so the taint engine roots
+    it: a host sync smuggled into its reduction body must fire on the
+    compiled sweep lane exactly as it does on the Pallas scan driver."""
+    mod = tmp_path / "fused_sweep_xla.py"
+    src = open(f"{SRC}/kernels/fused_sweep_xla.py").read()
+    needle = "counts = jnp.sum(ok.reshape(nb, bp)"
+    assert needle in src
+    mod.write_text(src.replace(
+        needle, "counts = jnp.sum(ok.reshape(nb, bp).item() * ok.reshape(nb, bp)"))
+
+    findings = analyze_paths([str(mod)], rules=["hot-host-sync"])
+    assert [f.rule for f in findings] == ["hot-host-sync"]
+    assert ".item()" in findings[0].message
+
+    # the shipped XLA lane is clean under the same rule
+    assert analyze_paths([f"{SRC}/kernels/fused_sweep_xla.py"],
+                         rules=["hot-host-sync"]) == []
+
+
+# ---------------------------------------------------------------------------
 # mutation: re-introduce the PR-7 dogfood finding -> hot-invariant-transform
 # ---------------------------------------------------------------------------
 def test_relayout_inside_scan_driver_is_flagged(tmp_path):

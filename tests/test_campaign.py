@@ -311,6 +311,56 @@ def test_resume_refuses_signature_mismatch(space, mesh, tmp_path):
         run_campaign(space, str(tmp_path), mesh=mesh)
 
 
+def test_manifest_records_resolved_backend(space, mesh, tmp_path):
+    """The manifest stores the RESOLVED lane (never "auto"), so resume
+    is deterministic on any host."""
+    from repro.kernels.runtime import resolve_backend
+    _campaign(space, tmp_path, mesh)
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["sweep"]["backend"] == resolve_backend(None)
+    assert man["sweep"]["backend"] in ("pallas", "xla")
+
+
+def test_resume_refuses_cross_backend(space, mesh, tmp_path, monkeypatch):
+    """Shards checkpointed by one megakernel lane must not merge with
+    shards computed by the other: an EXPLICIT contradicting backend
+    (argument or env) refuses; "auto" reuses the recorded lane."""
+    monkeypatch.delenv("REPRO_SWEEP_BACKEND", raising=False)
+    _campaign(space, tmp_path, mesh)
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    recorded = man["sweep"]["backend"]
+    other = "pallas" if recorded == "xla" else "xla"
+    with pytest.raises(CampaignMismatchError, match="backend"):
+        run_campaign(space, str(tmp_path), mesh=mesh, backend=other)
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", other)   # env is explicit too
+    with pytest.raises(CampaignMismatchError, match="backend"):
+        run_campaign(space, str(tmp_path), mesh=mesh)
+    monkeypatch.delenv("REPRO_SWEEP_BACKEND")
+    # deferring ("auto") or naming the recorded lane both merge cleanly
+    for again in ("auto", recorded):
+        res = run_campaign(space, str(tmp_path), mesh=mesh, backend=again)
+        assert res.campaign["n_executed"] == 0
+        assert not res.campaign["partial"]
+
+
+def test_legacy_manifest_without_backend_means_pallas(space, mesh,
+                                                      tmp_path,
+                                                      monkeypatch):
+    """Pre-backend manifests (no ``sweep.backend`` key) imply the only
+    lane that existed when they were planned: resume treats them as
+    recorded-pallas — explicit "xla" refuses, "auto" does not."""
+    monkeypatch.delenv("REPRO_SWEEP_BACKEND", raising=False)
+    _campaign(space, tmp_path, mesh)
+    man_path = tmp_path / "manifest.json"
+    man = json.loads(man_path.read_text())
+    del man["sweep"]["backend"]
+    man_path.write_text(json.dumps(man))
+    with pytest.raises(CampaignMismatchError, match="pallas"):
+        run_campaign(space, str(tmp_path), mesh=mesh, backend="xla")
+    res = run_campaign(space, str(tmp_path), mesh=mesh)
+    assert res.campaign["n_executed"] == 0
+
+
 def test_corrupt_shard_refused_then_redispatched(space, straight, mesh,
                                                  tmp_path):
     _campaign(space, tmp_path, mesh)

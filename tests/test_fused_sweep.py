@@ -256,6 +256,175 @@ def test_set_stream_cache_limit_shrinks_immediately():
 
 
 # ---------------------------------------------------------------------------
+# execution backends: XLA lane == Pallas lane == staged oracle (ISSUE 8)
+# ---------------------------------------------------------------------------
+def _backend_case(grids, *, algorithm="edgaze", chunk_size=16, k=5,
+                  index_range=None, superchunk=None):
+    """Run the same sweep through both fused backends + the staged
+    oracle and assert full topk/summary parity."""
+    from repro.core.shard_sweep import sweep_stream
+    xla = sweep_stream(algorithm, grids, chunk_size=chunk_size, k=k,
+                       index_range=index_range, superchunk=superchunk,
+                       backend="xla")
+    pal = sweep_stream(algorithm, grids, chunk_size=chunk_size, k=k,
+                       index_range=index_range, superchunk=superchunk,
+                       backend="pallas")
+    staged = sweep_stream(algorithm, grids, chunk_size=chunk_size, k=k,
+                          index_range=index_range, engine="staged")
+    assert xla.backend == "xla" and xla.kernel_mode == "xla"
+    assert pal.backend == "pallas"
+    assert pal.kernel_mode in ("interpret", "compiled")
+    assert staged.backend == "pallas"
+    _assert_stream_equal(xla, pal)
+    _assert_stream_equal(xla, staged)
+    return xla, pal
+
+
+def test_backend_parity_fixed_cases():
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0, 32.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    xla, pal = _backend_case(grids, chunk_size=13, k=7)
+    assert xla.n_points == pal.n_points == 2 * 3 * 2 * 3 * 2
+    # both lanes ride the same scan driver: dispatch counts agree
+    assert xla.dispatches == pal.dispatches
+
+
+def test_backend_parity_multi_algorithm():
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0],
+             "frame_rate": [15.0, 60.0],
+             "mem_tech": ["sram_hp", "stt"]}
+    _backend_case(grids, algorithm=["edgaze", "rhythmic"], chunk_size=8,
+                  k=6)
+
+
+def test_backend_parity_index_range_tails():
+    grids = {"variant": ["2d_in", "3d_in"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "active_fraction_scale": [0.25, 1.0]}
+    total = 2 * 3 * 2 * 2
+    for lo, hi in ((0, total), (5, total - 3),
+                   (total // 2 - 1, total // 2 + 3)):
+        xla, _pal = _backend_case(grids, chunk_size=8, k=4,
+                                  index_range=(lo, hi))
+        assert xla.n_points == hi - lo
+
+
+def test_backend_parity_property():
+    """Hypothesis sweep over grid shapes / chunk / k / range cuts with
+    the XLA lane judged against the Pallas lane and the staged oracle."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    strategy = st.tuples(
+        st.integers(min_value=1, max_value=3),            # cis nodes
+        st.integers(min_value=1, max_value=3),            # frame rates
+        st.integers(min_value=1, max_value=2),            # variants
+        st.integers(min_value=1, max_value=19),           # chunk size
+        st.integers(min_value=1, max_value=6),            # k
+        st.integers(min_value=0, max_value=100),          # lo seed
+        st.integers(min_value=0, max_value=100),          # hi seed
+    )
+    cis = [130.0, 65.0, 28.0]
+    fps = [15.0, 30.0, 60.0]
+    variants = ["2d_in", "3d_in"]
+
+    @hyp.settings(max_examples=8, deadline=None)
+    @hyp.given(strategy)
+    def run(params):
+        nc, nf, nv, chunk, k, lo_s, hi_s = params
+        grids = {"variant": variants[:nv], "cis_node": cis[:nc],
+                 "frame_rate": fps[:nf]}
+        total = nv * nc * nf
+        lo = lo_s % total
+        hi = lo + 1 + (hi_s % (total - lo))
+        _backend_case(grids, chunk_size=chunk, k=k, index_range=(lo, hi))
+
+    run()
+
+
+@pytest.mark.slow
+def test_backend_xla_int64_widened_window():
+    """The XLA lane honors the `total + chunk >= 2**31` int64 widening:
+    a tail slice inside the int32 danger window must match the Pallas
+    lane bit-for-bit instead of wrapping flat indices negative."""
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["3d_in"],
+             "cis_node": list(np.linspace(28.0, 130.0, 1057)),
+             "sys_rows": list(np.linspace(4.0, 128.0, 18)),
+             "frame_rate": list(np.linspace(15.0, 120.0, 341)),
+             "active_fraction_scale": list(np.linspace(0.1, 1.0, 331))}
+    total = 1057 * 18 * 341 * 331
+    assert total == 2 ** 31 - 2            # in the int32 danger window
+    xla = sweep_stream("edgaze", grids, chunk_size=16, k=3,
+                       index_range=(total - 6, total), backend="xla")
+    pal = sweep_stream("edgaze", grids, chunk_size=16, k=3,
+                       index_range=(total - 6, total), backend="pallas")
+    assert xla.n_points == pal.n_points == 6
+    assert total - 6 <= xla.topk[0]["index"] < total
+    _assert_stream_equal(xla, pal)
+
+
+def test_backend_single_executable_each():
+    """Each backend keeps the one-executable invariant, and repeat
+    sweeps hit the cached entry instead of recompiling."""
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    from repro.launch.mesh import make_batch_mesh
+    mesh = make_batch_mesh(1)
+    grids = {"variant": ["2d_in", "3d_in", "2d_off"],
+             "cis_node": [130.0, 65.0, 28.0],
+             "frame_rate": [15.0, 30.0],
+             "sys_rows": [8.0, 16.0]}
+    for backend in ("xla", "pallas"):
+        stream_cache_clear()
+        res = sweep_stream("edgaze", grids, chunk_size=4, k=3, mesh=mesh,
+                           backend=backend)
+        info = stream_cache_info()
+        assert info["step_compiles"] == 1 and info["size"] == 1, \
+            (backend, info)
+        assert res.dispatches == 1 and res.superchunk == 9, backend
+        res2 = sweep_stream("edgaze", grids, chunk_size=4, k=3, mesh=mesh,
+                            backend=backend)
+        assert stream_cache_info()["hits"] == 1, backend
+        _assert_stream_equal(res2, res)
+
+
+def test_backend_distinct_cache_keys():
+    """The backend is part of the executable-cache key: the same sweep
+    on both backends compiles TWO executables, and re-running either
+    hits its own entry."""
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info, sweep_stream)
+    grids = {"variant": ["2d_in"], "cis_node": [130.0, 65.0],
+             "frame_rate": [15.0, 30.0]}
+    stream_cache_clear()
+    sweep_stream("edgaze", grids, chunk_size=4, k=3, backend="xla")
+    sweep_stream("edgaze", grids, chunk_size=4, k=3, backend="pallas")
+    info = stream_cache_info()
+    assert info["step_compiles"] == 2 and info["size"] == 2, info
+    sweep_stream("edgaze", grids, chunk_size=4, k=3, backend="xla")
+    sweep_stream("edgaze", grids, chunk_size=4, k=3, backend="pallas")
+    info = stream_cache_info()
+    assert info["step_compiles"] == 2 and info["hits"] == 2, info
+
+
+def test_backend_staged_rejects_explicit_xla():
+    from repro.core.shard_sweep import sweep_stream
+    grids = {"variant": ["2d_in"], "cis_node": [130.0, 65.0]}
+    with pytest.raises(ValueError, match="staged"):
+        sweep_stream("edgaze", grids, chunk_size=4, k=2, engine="staged",
+                     backend="xla")
+    # "auto" defers -> staged quietly runs its (pallas) pipeline
+    res = sweep_stream("edgaze", grids, chunk_size=4, k=2,
+                       engine="staged", backend="auto")
+    assert res.backend == "pallas"
+
+
+# ---------------------------------------------------------------------------
 # coefficient-form compute == banked vmap evaluator (direct, no driver)
 # ---------------------------------------------------------------------------
 def test_coeff_compute_matches_banked_eval():

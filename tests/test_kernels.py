@@ -147,3 +147,74 @@ def test_kernel_mode_tracks_env_override(monkeypatch):
     assert runtime.kernel_mode() == "compiled"
     monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
     assert runtime.kernel_mode() == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# sweep-backend selection (kernels/runtime.py, ISSUE 8)
+# ---------------------------------------------------------------------------
+def test_resolve_backend_auto_follows_platform(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.delenv("REPRO_SWEEP_BACKEND", raising=False)
+    want = "pallas" if runtime.on_tpu() else "xla"
+    for deferred in (None, "auto"):
+        assert runtime.explicit_backend(deferred) is None
+        assert runtime.resolve_backend(deferred) == want
+
+
+def test_resolve_backend_env_override(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "pallas")
+    assert runtime.resolve_backend(None) == "pallas"
+    assert runtime.explicit_backend(None) == "pallas"
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "xla")
+    assert runtime.resolve_backend("auto") == "xla"
+    # "auto" in the env defers to the platform policy
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "auto")
+    assert runtime.explicit_backend(None) is None
+
+
+def test_resolve_backend_argument_beats_env(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "pallas")
+    assert runtime.resolve_backend("xla") == "xla"
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "xla")
+    assert runtime.resolve_backend("pallas") == "pallas"
+
+
+def test_resolve_backend_invalid_values_raise(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_SWEEP_BACKEND", "mosaic")
+    with pytest.raises(ValueError) as ei:
+        runtime.resolve_backend(None)
+    msg = str(ei.value)
+    assert "REPRO_SWEEP_BACKEND" in msg and "'mosaic'" in msg
+    monkeypatch.delenv("REPRO_SWEEP_BACKEND")
+    with pytest.raises(ValueError, match="tpu"):
+        runtime.resolve_backend("tpu")
+
+
+def test_sweep_kernel_mode_tags(monkeypatch):
+    from repro.kernels import runtime
+
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "1")
+    assert runtime.sweep_kernel_mode("xla") == "xla"
+    assert runtime.sweep_kernel_mode("pallas") == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_INTERPRET", "0")
+    assert runtime.sweep_kernel_mode("pallas") == "compiled"
+
+
+def test_reset_backend_cache_reprobes(monkeypatch):
+    """The memoized platform probe must drop on reset_backend_cache so
+    post-init platform changes (distributed init, subprocess re-imports)
+    are observed instead of serving a stale answer forever."""
+    from repro.kernels import runtime
+
+    real = runtime.on_tpu()                   # memoizes the real probe
+    monkeypatch.setattr(runtime, "_BACKEND_IS_TPU", not real)
+    assert runtime.on_tpu() is (not real)     # stale value served
+    runtime.reset_backend_cache()
+    assert runtime.on_tpu() is real           # re-probed after reset

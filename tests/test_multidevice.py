@@ -79,3 +79,43 @@ def test_sharded_execution_matches_single_device():
                           capture_output=True, text=True, timeout=560)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MULTIDEVICE_OK" in proc.stdout, proc.stdout
+
+
+BACKEND_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.pop("REPRO_SWEEP_BACKEND", None)
+import jax
+from repro.kernels import runtime
+assert len(jax.devices()) == 8
+# a stale platform probe (memoized before this process forced its cpu
+# device set — the bug reset_backend_cache exists for) must not leak
+# into backend resolution after a reset
+runtime.on_tpu()
+runtime._BACKEND_IS_TPU = True           # simulate the stale memo
+assert runtime.resolve_backend(None) == "pallas"
+runtime.reset_backend_cache()
+assert runtime.on_tpu() is False
+assert runtime.resolve_backend(None) == "xla"
+from repro.core.shard_sweep import sweep_stream
+grids = {"variant": ["2d_in", "3d_in"],
+         "cis_node": [130.0, 65.0, 28.0],
+         "frame_rate": [15.0, 30.0]}
+res = sweep_stream("edgaze", grids, chunk_size=4, k=3)
+assert res.backend == "xla" and res.kernel_mode == "xla", (
+    res.backend, res.kernel_mode)
+print("BACKEND_RESET_OK")
+"""
+
+
+@pytest.mark.slow
+def test_backend_cache_reset_on_forced_device_mesh():
+    """reset_backend_cache() re-probes the platform inside a subprocess
+    whose device set was forced after a (simulated) earlier probe; the
+    resolved auto backend then drives an actual 8-device sweep."""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", BACKEND_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "BACKEND_RESET_OK" in proc.stdout, proc.stdout
