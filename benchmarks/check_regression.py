@@ -37,7 +37,7 @@ METRICS = ("mega_points_per_sec_1dev", "mega_points_per_sec_8dev")
 #: cpus keeps differently-sized hosts apart (the history already holds
 #: mega_sweep rows mixing cpus: 2 and cpus: 1)
 COMPARABLE = ("schema", "bench", "mega_n_points", "devices", "cpus",
-              "backend", "kernel_mode", "tuned_host")
+              "backend", "kernel_mode", "tuned_host", "workers")
 
 
 def comparable(a: dict, b: dict) -> bool:

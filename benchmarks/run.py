@@ -658,7 +658,14 @@ def campaign_sweep(emit_json: bool = True) -> List[str]:
            "campaign_resume_loaded": resumed.campaign["n_loaded"],
            "campaign_resume_s": round(resume_s, 4),
            "campaign_step_compiles": stream_cache_info()["step_compiles"],
-           "campaign_parity": parity}
+           "campaign_parity": parity,
+           # parallel-executor accounting (workers=1 here: the serial
+           # lane, but the columns keep history rows comparable across
+           # worker counts and record how much checkpoint I/O the
+           # background writer hid behind dispatch)
+           "workers": camp.campaign["workers"],
+           "io_overlap_frac": camp.campaign["io_overlap_frac"],
+           "dispatch_wait_s": camp.campaign["dispatch_wait_s"]}
     if emit_json:
         _update_bench_json(rec)
         import jax
@@ -671,6 +678,119 @@ def campaign_sweep(emit_json: bool = True) -> List[str]:
             f" resume_loaded={rec['campaign_resume_loaded']}"
             f" resume_executed={rec['campaign_resume_executed']}"
             f" executables={rec['campaign_step_compiles']}"
+            f" workers={rec['workers']}"
+            f" io_overlap={rec['io_overlap_frac']:.2f}"
+            f" parity={parity}"]
+
+
+# grid for the campaign_parallel bench: ~14.7M points over many small
+# shards, so steady-state shard execution dominates the parent's
+# scheduling/checkpoint machinery while the lane still finishes in a
+# couple of minutes; shrink with CAMPAIGN_PARALLEL_GRIDS_JSON
+_PARALLEL_GRIDS = {
+    "cis_node": [180., 130., 90., 65., 45., 28.],
+    "frame_rate": [float(v) for v in range(10, 250, 10)],
+    "sys_rows": [float(v) for v in range(8, 136, 8)],
+    "sys_cols": [float(v) for v in range(8, 136, 8)],
+    "active_fraction_scale": [i / 16.0 for i in range(1, 9)],
+    "pixel_pitch_um": [1.0 + 0.5 * i for i in range(10)],
+}
+
+
+def campaign_parallel(emit_json: bool = True) -> List[str]:
+    """Multi-worker campaign executor: workers=2 vs workers=1.
+
+    Runs the same sharded campaign serial and with two persistent worker
+    processes, asserting bit-identical top-k, ONE step executable per
+    worker, and — on the default lane on multi-core hosts — a
+    steady-state speedup floor.  Steady-state excludes the pool spin-up
+    (``worker_startup_s``: fresh interpreter + JAX runtime + compile per
+    worker), a per-campaign constant that amortizes over real campaign
+    lengths but dominates a minutes-long CI lane.  The workers=2
+    campaign directory is left under ``benchmarks/results/
+    campaign_parallel`` for CI artifact upload.
+    """
+    import shutil
+    from repro.campaign import CampaignOptions, run_campaign
+    from repro.core.shard_sweep import stream_cache_clear
+    from repro.explore import DesignSpace, explore
+
+    grids = json.loads(os.environ.get("CAMPAIGN_PARALLEL_GRIDS_JSON",
+                                      json.dumps(_PARALLEL_GRIDS)))
+    space = DesignSpace(["edgaze"], grids)
+    chunk = int(os.environ.get("CAMPAIGN_PARALLEL_CHUNK", 1 << 12))
+    shard_points = int(os.environ.get("CAMPAIGN_PARALLEL_SHARD_POINTS",
+                                      1 << 19))
+    default_lane = ("CAMPAIGN_PARALLEL_GRIDS_JSON" not in os.environ
+                    and "CAMPAIGN_PARALLEL_CHUNK" not in os.environ
+                    and "CAMPAIGN_PARALLEL_SHARD_POINTS" not in os.environ)
+    serial_dir = os.path.join(RESULTS, "campaign_parallel_serial")
+    par_dir = os.path.join(RESULTS, "campaign_parallel")
+    shutil.rmtree(serial_dir, ignore_errors=True)
+    shutil.rmtree(par_dir, ignore_errors=True)
+
+    stream_cache_clear()
+    explore(space, engine="fused", chunk_size=chunk, k=8,
+            superchunk=16)                                  # warm compile
+    t0 = time.perf_counter()
+    serial = run_campaign(
+        space, serial_dir, k=8, engine="fused", chunk_size=chunk,
+        workers=1, options=CampaignOptions(shard_points=shard_points))
+    serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    par = run_campaign(
+        space, par_dir, k=8, engine="fused", chunk_size=chunk,
+        workers=2, options=CampaignOptions(shard_points=shard_points))
+    parallel_s = time.perf_counter() - t0
+    shutil.rmtree(serial_dir, ignore_errors=True)  # parallel dir stays
+
+    def _key(res):
+        return [(round(r["total_j"], 15), r["variant"], r["index"])
+                for r in res.topk]
+    parity = (_key(serial) == _key(par)
+              and not serial.campaign["partial"]
+              and not par.campaign["partial"])
+    assert parity, "workers=2 campaign top-k diverged from workers=1"
+    compiles = par.campaign["worker_step_compiles"]
+    assert compiles and set(compiles) == {1}, (
+        f"every worker must ride ONE step executable, got {compiles}")
+    startup_s = par.campaign["worker_startup_s"]
+    speedup_wall = serial_s / max(parallel_s, 1e-9)
+    speedup_steady = serial_s / max(parallel_s - startup_s, 1e-9)
+    min_speedup = float(os.environ.get("CAMPAIGN_PARALLEL_MIN_SPEEDUP",
+                                       "1.5"))
+    if default_lane and (os.cpu_count() or 1) >= 2:
+        assert speedup_steady >= min_speedup, (
+            f"workers=2 steady-state speedup {speedup_steady:.2f}x "
+            f"(wall {speedup_wall:.2f}x, startup {startup_s:.1f}s) is "
+            f"under the {min_speedup}x floor")
+    rec = {"backend": serial.backend,
+           "kernel_mode": serial.stream_result.kernel_mode,
+           "workers": par.campaign["workers"],
+           "io_overlap_frac": par.campaign["io_overlap_frac"],
+           "dispatch_wait_s": par.campaign["dispatch_wait_s"],
+           "parallel_n_points": par.n_points,
+           "parallel_n_shards": par.campaign["n_planned"],
+           "parallel_serial_s": round(serial_s, 4),
+           "parallel_wall_s": round(parallel_s, 4),
+           "parallel_worker_startup_s": round(startup_s, 4),
+           "parallel_speedup_wall": round(speedup_wall, 4),
+           "parallel_speedup_steady": round(speedup_steady, 4),
+           "parallel_points_per_sec": round(par.n_points
+                                            / max(parallel_s, 1e-12)),
+           "parallel_parity": parity}
+    if emit_json:
+        _update_bench_json(rec)
+        import jax
+        _append_history("campaign_parallel", rec,
+                        devices=jax.local_device_count())
+    return [f"campaign_parallel,{parallel_s*1e6:.0f},"
+            f"points={par.n_points} shards={rec['parallel_n_shards']}"
+            f" workers={rec['workers']}"
+            f" speedup={speedup_wall:.2f}x steady={speedup_steady:.2f}x"
+            f" startup={startup_s:.1f}s"
+            f" io_overlap={rec['io_overlap_frac']:.2f}"
+            f" executables={compiles}"
             f" parity={parity}"]
 
 
@@ -697,7 +817,7 @@ def roofline_table() -> List[str]:
 
 BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
            fig12_stage_breakdown, kernel_microbench, design_sweep,
-           mega_sweep, campaign_sweep, roofline_table]
+           mega_sweep, campaign_sweep, campaign_parallel, roofline_table]
 
 
 _EPILOG = """\
@@ -721,6 +841,18 @@ environment knobs:
                            XLA_FLAGS=--xla_force_host_platform_device_count=N
   MEGA_SWEEP_GRIDS_JSON / CAMPAIGN_SWEEP_GRIDS_JSON
                          shrink the sweep grids for smoke runs.
+  REPRO_CAMPAIGN_WORKERS default worker-process count for campaign
+                         runs (run_campaign(workers=)/explore(workers=)
+                         and CampaignOptions.workers win over the env).
+  CAMPAIGN_PARALLEL_GRIDS_JSON / CAMPAIGN_PARALLEL_CHUNK /
+  CAMPAIGN_PARALLEL_SHARD_POINTS
+                         shrink the campaign_parallel lane for smoke
+                         runs; any of them set marks the lane
+                         non-default, which skips the speedup assert.
+  CAMPAIGN_PARALLEL_MIN_SPEEDUP
+                         steady-state workers=2 speedup floor (default
+                         1.5), asserted only on the default lane on
+                         hosts with >= 2 cores.
   BENCH_COMPILE_CACHE_DIR
                          persistent XLA compile cache location.
 """

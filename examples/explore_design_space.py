@@ -25,6 +25,11 @@ returns the same ``ExploreResult`` shape:
    mid-campaign kill (simulated here with deterministic fault
    injection) and resumes dispatching ONLY the missing shards — the
    merged result is identical to the uninterrupted run.
+6. PARALLEL campaigns: ``workers=2`` (or ``REPRO_CAMPAIGN_WORKERS``)
+   dispatches the same shard plan to persistent worker processes — one
+   JAX runtime and ONE step executable each — with checkpoint
+   serialization overlapped on a background writer thread; the merged
+   top-k bit-matches the serial path.
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
 the same component-energy methodology applied to the 256-chip training
@@ -208,6 +213,35 @@ def main():
           f"run: {match}")
     assert match and not rep["partial"]
     shutil.rmtree(camp_dir, ignore_errors=True)
+
+    # ----- Parallel campaigns: multi-worker sharded dispatch --------------
+    # workers=N (or REPRO_CAMPAIGN_WORKERS=N) dispatches shard ranges to
+    # N persistent spawn-context worker processes, each owning its own
+    # JAX runtime and exactly ONE step executable; the parent folds
+    # StreamResults in arrival order (the merge is associative) while a
+    # bounded background writer thread checkpoints completed shards, so
+    # serialization never sits between dispatches.  A worker death is a
+    # transient failure of its in-flight shard — retried, never a
+    # campaign abort — and resume() works the same at any worker count.
+    # Stale campaign directories are reclaimed with the retention CLI:
+    #   python -m repro.campaign --gc ROOT --keep-days 30
+    # (refuses resumable/corrupt dirs unless --force).
+    par_dir = tempfile.mkdtemp(prefix="campaign_par_")
+    par = explore(camp_space, engine="fused", chunk_size=16, k=4,
+                  checkpoint_dir=par_dir, workers=2,
+                  campaign=CampaignOptions(shard_points=36))
+    rep = par.campaign
+    print(f"\n=== Parallel campaign: {rep['n_executed']} shards over "
+          f"{rep['workers']} workers ===")
+    print(f"per-worker step executables {rep['worker_step_compiles']} "
+          f"(ONE each), checkpoint I/O {rep['io_overlap_frac']:.0%} "
+          f"overlapped, worker spin-up {rep['worker_startup_s']:.1f}s")
+    match = [(r['variant'], r['index']) for r in par.topk] == \
+            [(r['variant'], r['index']) for r in straight.topk]
+    print(f"workers=2 top-{straight.k} identical to the serial sweep: "
+          f"{match}")
+    assert match and set(rep["worker_step_compiles"]) == {1}
+    shutil.rmtree(par_dir, ignore_errors=True)
 
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "results", "dryrun.json")

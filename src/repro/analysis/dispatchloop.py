@@ -1,0 +1,104 @@
+"""Dispatch-loop pacing rule.
+
+A streaming driver that calls ``jax.block_until_ready`` /
+``jax.device_get`` UNCONDITIONALLY inside its dispatch loop serializes
+host and device: every iteration drains the pipeline before the next
+dispatch is enqueued, so dispatch/compute overlap drops to zero and the
+sweep runs at host-roundtrip cadence.  The shipped drivers pace with a
+bounded in-flight window instead — they block only under
+``if len(inflight) > depth:`` and barrier AFTER the loop — which keeps
+the device busy while bounding how far the host runs ahead.
+
+The rule engages on loops that dispatch a prepared executable (a name
+bound from a ``*_exec`` factory call, e.g. ``exe, keys =
+_fused_exec(...)``) and flags sync calls that are unconditional within
+the loop body; anything guarded by an ``if`` (depth pacing, error
+paths) passes, as do warm-up syncs before the loop and final barriers
+after it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from . import astutil
+from .framework import Finding, ModuleContext, register_rule
+from .astutil import canonical, dotted
+
+#: host-sync entry points that drain the device pipeline
+_SYNC_FNS = {"jax.block_until_ready", "jax.device_get"}
+
+
+def _exec_names(tree: ast.Module) -> Set[str]:
+    """Names bound from a ``*_exec`` factory call (tuple unpack included)."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        fname = dotted(node.value.func) or ""
+        if not fname.rsplit(".", 1)[-1].endswith("_exec"):
+            continue
+        for tgt in node.targets:
+            elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+            for el in elts:
+                if isinstance(el, ast.Name):
+                    names.add(el.id)
+    return names
+
+
+def _calls_executable(loop: ast.AST, exec_names: Set[str]) -> bool:
+    for node in ast.walk(loop):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in exec_names:
+            return True
+    return False
+
+
+def _unconditional_syncs(loop: ast.AST, aliases) -> List[ast.Call]:
+    """Sync calls reached on EVERY loop iteration: the scan descends
+    through the loop body but prunes at ``if`` statements (a guarded
+    block is pacing, not serialization) and at nested defs/lambdas
+    (deferred code does not run per-iteration)."""
+    out: List[ast.Call] = []
+    stack: List[ast.AST] = list(loop.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.If, ast.FunctionDef,
+                             ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        if isinstance(node, ast.Call) \
+                and canonical(aliases, dotted(node.func)) in _SYNC_FNS:
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return sorted(out, key=lambda c: (c.lineno, c.col_offset))
+
+
+@register_rule(
+    "dispatch-loop-sync",
+    description="unconditional jax.block_until_ready/device_get inside a "
+                "loop dispatching a prepared *_exec executable (serializes "
+                "host and device; pace with a bounded in-flight window)")
+def dispatch_loop_sync(ctx: ModuleContext) -> Iterable[Finding]:
+    exec_names = _exec_names(ctx.tree)
+    if not exec_names:
+        return []
+    aliases = astutil.get_engine(ctx).aliases
+    out: List[Finding] = []
+    for loop in ast.walk(ctx.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        if not _calls_executable(loop, exec_names):
+            continue
+        for call in _unconditional_syncs(loop, aliases):
+            fname = canonical(aliases, dotted(call.func))
+            out.append(Finding(
+                rule="dispatch-loop-sync", path=ctx.path,
+                line=call.lineno,
+                message=f"`{fname.rsplit('.', 1)[-1]}` runs on EVERY "
+                        "iteration of this dispatch loop, draining the "
+                        "device before the next dispatch is enqueued; "
+                        "pace with a bounded in-flight window (block "
+                        "only when the window is full) and barrier "
+                        "after the loop"))
+    return out

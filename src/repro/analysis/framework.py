@@ -101,7 +101,7 @@ def register_rule(name: str, *, severity: str = "error",
 
 def _load_rule_modules() -> None:
     # Late import: rule modules import this one for register_rule.
-    from . import hotpath, recompile, units  # noqa: F401
+    from . import dispatchloop, hotpath, recompile, units  # noqa: F401
 
 
 def all_rules() -> Dict[str, Rule]:

@@ -3,12 +3,19 @@
 ``run_campaign(space, checkpoint_dir)`` shards a design-space sweep
 into checkpointed ``index_range`` units with bounded retry, OOM
 splitting and quarantine; ``resume(manifest_path)`` re-dispatches only
-what's missing.  See :mod:`repro.campaign.runner` for the execution
-model and :mod:`repro.campaign.manifest` for the on-disk schema.
+what's missing; ``workers=N`` runs shards on N persistent worker
+processes with overlapped checkpoint I/O (see
+:mod:`repro.campaign.executor`).  See :mod:`repro.campaign.runner` for
+the execution model, :mod:`repro.campaign.manifest` for the on-disk
+schema and :mod:`repro.campaign.gc` for directory retention
+(``python -m repro.campaign --gc <root> --keep-days N``).
 """
+from .executor import (CheckpointWriter, ProcessShardExecutor,
+                       SerialShardExecutor, resolve_workers)
 from .faults import (CampaignFault, DeterministicFault, FaultSchedule,
-                     KillCampaign, OOMFault, ShardTimeout, TransientFault,
-                     classify_failure)
+                     KillCampaign, KillWorker, OOMFault, ShardTimeout,
+                     TransientFault, classify_failure)
+from .gc import campaign_status, gc_campaigns
 from .manifest import (CampaignIntegrityError, CampaignManifest,
                        CampaignMismatchError, bank_signature,
                        completed_shards, missing_ranges, plan_shards,
@@ -18,10 +25,12 @@ from .runner import CampaignOptions, resume, run_campaign
 
 __all__ = [
     "CampaignFault", "CampaignIntegrityError", "CampaignManifest",
-    "CampaignMismatchError", "CampaignOptions", "DeterministicFault",
-    "FaultSchedule", "KillCampaign", "OOMFault", "ShardTimeout",
-    "TransientFault", "bank_signature", "classify_failure",
-    "completed_shards", "merge_stream_results", "merged_coverage",
-    "missing_ranges", "plan_shards", "read_shard", "resume",
-    "run_campaign", "space_signature", "write_shard",
+    "CampaignMismatchError", "CampaignOptions", "CheckpointWriter",
+    "DeterministicFault", "FaultSchedule", "KillCampaign", "KillWorker",
+    "OOMFault", "ProcessShardExecutor", "SerialShardExecutor",
+    "ShardTimeout", "TransientFault", "bank_signature",
+    "campaign_status", "classify_failure", "completed_shards",
+    "gc_campaigns", "merge_stream_results", "merged_coverage",
+    "missing_ranges", "plan_shards", "read_shard", "resolve_workers",
+    "resume", "run_campaign", "space_signature", "write_shard",
 ]

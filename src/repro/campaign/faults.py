@@ -22,6 +22,9 @@ Fault taxonomy (mirrors the runner's classifier for REAL exceptions):
 * :class:`KillCampaign` — simulated SIGKILL: propagates out of the
   runner mid-campaign, leaving the checkpoint directory exactly as a
   killed process would.  ``resume()`` then picks up the survivors.
+* :class:`KillWorker` — simulated SIGKILL of ONE pool worker process
+  (``workers > 1``): the in-flight shard is lost and retried as
+  transient while the pool respawns a replacement — never an abort.
 """
 from __future__ import annotations
 
@@ -62,6 +65,21 @@ class KillCampaign(CampaignFault):
     without any handling, so on-disk state is whatever the completed
     shards already checkpointed."""
     kind = "kill"
+
+
+class KillWorker(TransientFault):
+    """Simulated WORKER death (SIGKILL of one pool process).
+
+    Under a parallel executor (``workers > 1``) the scheduled shard is
+    submitted with a die flag and the target worker SIGKILLs itself on
+    receipt — the shard is genuinely in flight in a process that
+    genuinely dies, exercising the real detection / salvage / respawn
+    path.  The loss classifies as *transient* (the shard retries on a
+    surviving or respawned worker); the campaign never aborts.  Under
+    the serial executor there is no separate process: the fault is
+    raised at the shard boundary and retried as an ordinary transient.
+    """
+    kind = "transient"
 
 
 #: a schedule entry: an exception instance/class, or a callable

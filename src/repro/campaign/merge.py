@@ -40,6 +40,30 @@ def _check_disjoint(shards: Sequence[StreamResult]) -> None:
                 f"merge only disjoint index_range results")
 
 
+def _dedupe_redelivered(shards: Sequence[StreamResult]
+                        ) -> List[StreamResult]:
+    """Drop exact-duplicate index ranges, keeping the first in sort
+    order.
+
+    A parallel campaign can redeliver a COMPLETED shard (a worker dies
+    after finishing, the retry completes again, then the original
+    result is salvaged from the dead worker's pipe).  Shard execution
+    is deterministic — two completions of the same ``[lo, hi)`` carry
+    the same data — so redelivery is idempotent and safe to fold.
+    Partially-overlapping ranges are still an error
+    (:func:`_check_disjoint`): those points really would double-count.
+    """
+    seen = set()
+    out: List[StreamResult] = []
+    for s in shards:
+        key = (s.index_lo, s.index_hi)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(s)
+    return out
+
+
 def merged_coverage(shards: Sequence[StreamResult]
                     ) -> List[Tuple[int, int]]:
     """Sorted union of the shards' covered index ranges."""
@@ -64,7 +88,8 @@ def merge_stream_results(shards: Sequence[StreamResult], *,
     """
     if not shards:
         raise ValueError("merge_stream_results needs at least one shard")
-    shards = sorted(shards, key=lambda s: (s.index_lo, s.index_hi))
+    shards = _dedupe_redelivered(
+        sorted(shards, key=lambda s: (s.index_lo, s.index_hi)))
     _check_disjoint(shards)
     first = shards[0]
     k = int(k or first.k)

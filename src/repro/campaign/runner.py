@@ -9,19 +9,26 @@ into a campaign that survives process death:
    space into ``index_range`` shards.  On a later run against the same
    directory, the manifest is verified against the provided space and
    only the not-yet-completed ranges are dispatched.
-2. **Execute** — each shard runs ``explore(space, index_range=(lo, hi),
-   engine='fused')`` with a FIXED ``superchunk``, so every shard (and
-   every OOM half-shard) shares ONE step executable for the whole
-   campaign.  Failures are classified (:func:`classify_failure`):
-   transient -> bounded retry with exponential backoff; OOM -> split the
-   shard in half and retry the halves; deterministic -> quarantine and
-   continue.  A completed shard's O(k + V) ``StreamResult`` payload is
-   checkpointed atomically (tmp + fsync + rename, checksummed) before
-   the next shard starts, so a kill loses at most one shard of work.
+2. **Execute** — shards run ``explore(space, index_range=(lo, hi),
+   engine='fused')`` with a FIXED ``superchunk`` through a pluggable
+   executor (:mod:`repro.campaign.executor`): ``workers=1`` (default)
+   dispatches in-process against one shared ``_StreamPrep`` — exactly
+   the pre-parallel path, bit-identical — while ``workers=N`` feeds the
+   shard queue to N persistent worker processes, each with its own JAX
+   runtime and ONE step executable, folding results in arrival order.
+   Completed shards checkpoint through a bounded background writer
+   (atomic tmp + fsync + rename, checksummed) so serialization never
+   sits between two dispatches; the writer is flushed-and-barriered
+   before the merge and ``report.json``.  Failures are classified
+   (:func:`classify_failure`): transient -> bounded retry with
+   exponential backoff; OOM -> split the shard in half and retry the
+   halves; deterministic -> quarantine and continue; a dead WORKER is a
+   transient failure of its in-flight shard, never a campaign abort.
 3. **Merge** — checkpointed + freshly-computed shard results fold
    through :func:`merge_stream_results` into one result bit-compatible
    (rel 1e-6) with the unsharded sweep, and a ``report.json`` records
-   what ran, retried, split and quarantined.
+   what ran, retried, split and quarantined, plus the parallel/overlap
+   accounting (``workers``, ``dispatch_wait_s``, ``io_overlap_frac``).
 
 ``resume(manifest_path)`` rebuilds the space from the manifest payload
 and re-enters the same machinery — it dispatches ONLY the missing
@@ -34,83 +41,52 @@ import dataclasses
 import os
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from ..ckpt import atomic_write_json
 from ..core.shard_sweep import (_DEFAULT_SUPERCHUNK, StreamResult,
-                                _prepare_stream, _stream_impl)
+                                _prepare_stream)
 from ..kernels.runtime import explicit_backend, resolve_backend
-from .faults import FaultSchedule, ShardTimeout, classify_failure
+from .executor import (CheckpointWriter, ProcessShardExecutor,
+                       SerialShardExecutor, ShardTask, _dispatch,
+                       resolve_workers)
+from .faults import FaultSchedule, KillWorker, classify_failure
 from .manifest import (REPORT_NAME, CampaignIntegrityError,
                        CampaignManifest, CampaignMismatchError,
                        completed_shards, missing_ranges, read_shard,
-                       shard_path, write_shard)
+                       shard_path)
 from .merge import merge_stream_results, merged_coverage
 
 _DEFAULT_CHUNK = 1 << 18
 
+__all__ = ["CampaignOptions", "run_campaign", "resume", "_dispatch"]
+
 
 @dataclasses.dataclass
 class CampaignOptions:
-    """Fault-handling knobs for :func:`run_campaign`.
+    """Fault-handling + parallelism knobs for :func:`run_campaign`.
 
     ``shard_points`` sets the planned shard width (default: four chunks,
     so a shard is a handful of dispatches); ``max_retries`` bounds
     attempts per shard for transient failures, backed off exponentially
     from ``backoff_s``; ``timeout_s`` aborts a shard dispatch that runs
     too long (classified transient); OOM splits recurse down to
-    ``min_shard_points`` before quarantining.  ``faults`` injects a
-    deterministic :class:`FaultSchedule` at shard boundaries (tests /
-    drills); ``sleep`` is injectable so backoff is testable without
-    wall-clock waits.
+    ``min_shard_points`` before quarantining.  ``workers`` sets the
+    shard-executor width (None: the ``REPRO_CAMPAIGN_WORKERS``
+    environment variable, else 1 = serial in-process execution);
+    ``workers > 1`` runs shards on persistent worker processes.
+    ``faults`` injects a deterministic :class:`FaultSchedule` at shard
+    boundaries (tests / drills); ``sleep`` is injectable so backoff is
+    testable without wall-clock waits.
     """
     shard_points: Optional[int] = None
     max_retries: int = 3
     backoff_s: float = 0.5
     timeout_s: Optional[float] = None
     min_shard_points: int = 1
+    workers: Optional[int] = None
     faults: Optional[FaultSchedule] = None
     sleep: Callable[[float], None] = time.sleep
-
-
-def _dispatch(space, lo: int, hi: int, sweep: Dict, mesh,
-              timeout_s: Optional[float], prep=None) -> StreamResult:
-    """Run one shard's sweep, optionally under a wall-clock budget.
-
-    Goes straight to ``_stream_impl`` (the space was validated when the
-    manifest was planned) with the campaign's shared ``_StreamPrep``, so
-    a shard dispatch does no variant re-lowering, bank rebuild or table
-    transpose — with the warm executable cached, per-shard fixed cost is
-    O(k) finalization only.  Legacy manifests without a recorded
-    ``backend`` dispatch on "pallas" (the only lane that existed when
-    they were planned), keeping resumed merges bit-compatible with
-    their checkpointed shards.
-    """
-    def run() -> StreamResult:
-        return _stream_impl(
-            list(space.algorithms), space.grids, soc_node=space.soc_node,
-            chunk_size=int(sweep["chunk_size"]), metric=sweep["metric"],
-            k=int(sweep["k"]), mesh=mesh,
-            block_points=int(sweep["block_points"]),
-            index_range=(lo, hi), engine=sweep["engine"],
-            superchunk=int(sweep["superchunk"]),
-            backend=sweep.get("backend") or "pallas",
-            _prepared=prep)
-
-    if timeout_s is None:
-        return run()
-    import concurrent.futures
-    pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
-    try:
-        fut = pool.submit(run)
-        try:
-            return fut.result(timeout=timeout_s)
-        except concurrent.futures.TimeoutError:
-            raise ShardTimeout(
-                f"shard [{lo}, {hi}) exceeded timeout_s={timeout_s}"
-            ) from None
-    finally:
-        pool.shutdown(wait=timeout_s is None)
 
 
 def _quarantine(directory: str, lo: int, hi: int, *, kind: str,
@@ -128,6 +104,7 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
                  superchunk: Optional[int] = None,
                  block_points: int = 4096, mesh=None,
                  backend: str = "auto",
+                 workers: Optional[int] = None,
                  options: Optional[CampaignOptions] = None,
                  on_corrupt: str = "refuse"):
     """Run (or resume) a durable sharded sweep campaign.
@@ -146,6 +123,13 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
     instead of silently merging shards computed by different
     executables; ``backend="auto"`` on resume reuses the recorded lane.
 
+    ``workers`` widens shard execution across that many persistent
+    worker processes (argument > ``options.workers`` >
+    ``REPRO_CAMPAIGN_WORKERS`` env > 1).  The worker count is an
+    EXECUTION property, not a campaign property: it is not recorded in
+    the manifest, and a serial campaign may be resumed parallel (or
+    vice versa) — the merge algebra is partition- and order-independent.
+
     ``on_corrupt``: ``'refuse'`` (default) raises
     :class:`CampaignIntegrityError` on a checksum-failing shard file;
     ``'redispatch'`` discards it and re-runs that range.
@@ -155,6 +139,13 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
         raise ValueError(f"on_corrupt must be 'refuse' or 'redispatch', "
                          f"got {on_corrupt!r}")
     opts = options or CampaignOptions()
+    if workers is not None and opts.workers is not None \
+            and int(workers) != int(opts.workers):
+        raise ValueError(
+            f"conflicting worker counts: workers={workers} vs "
+            f"CampaignOptions.workers={opts.workers} — set one")
+    n_workers = resolve_workers(
+        workers if workers is not None else opts.workers)
     t0 = time.perf_counter()
 
     # ----- plan: create or verify the manifest ----------------------------
@@ -223,58 +214,131 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
             continue
         results.append(StreamResult.from_payload(payload["result"]))
         loaded.append((lo, hi))
-    queue = deque((lo, hi, 1, 0) for lo, hi in
-                  missing_ranges(manifest.shards, loaded))
+    pending = deque(ShardTask(lo, hi) for lo, hi in
+                    missing_ranges(manifest.shards, loaded))
 
     # ----- execute --------------------------------------------------------
-    # one lowering/bank/table build for the WHOLE campaign: every shard
-    # (and every OOM half-shard) dispatches against this shared prep —
-    # per-shard fixed cost drops to executable-cache lookup + O(k)
-    # finalization (campaign_overhead_frac in the campaign_sweep bench)
-    prep = (_prepare_stream(list(space.algorithms), space.grids,
-                            soc_node=space.soc_node) if queue else None)
+    if n_workers > 1 and pending:
+        # parallel lane: the parent schedules, workers prepare + dispatch
+        # (one lowering/bank/table build PER WORKER, then one step
+        # executable each for the rest of the campaign)
+        executor = ProcessShardExecutor(
+            directory=checkpoint_dir, space_sig=manifest.space_sig,
+            sweep=sweep, workers=min(n_workers, len(pending)),
+            n_devices=(int(mesh.devices.size) if mesh is not None
+                       else None),
+            timeout_s=opts.timeout_s)
+    else:
+        # serial lane: one lowering/bank/table build for the WHOLE
+        # campaign — every shard (and every OOM half-shard) dispatches
+        # against this shared prep, so per-shard fixed cost drops to
+        # executable-cache lookup + O(k) finalization
+        prep = (_prepare_stream(list(space.algorithms), space.grids,
+                                soc_node=space.soc_node)
+                if pending else None)
+        executor = SerialShardExecutor(space, sweep, mesh, prep,
+                                       opts.timeout_s)
+    writer = CheckpointWriter(checkpoint_dir)
     executed: List[Dict] = []
     quarantined: List[Dict] = []
     n_retries = n_splits = n_completed = 0
-    while queue:
-        lo, hi, attempt, splits = queue.popleft()
-        try:
-            if opts.faults is not None:
-                opts.faults.check(lo, hi, attempt,
-                                  n_completed=n_completed)
-            st = _dispatch(space, lo, hi, sweep, mesh, opts.timeout_s,
-                           prep=prep)
-        except BaseException as exc:  # noqa: BLE001 - classified below
-            kind = classify_failure(exc)
-            executed.append({"lo": lo, "hi": hi, "attempt": attempt,
-                             "status": "fault", "kind": kind,
-                             "error": str(exc)})
-            if kind == "kill":
-                raise                   # simulated SIGKILL: no cleanup
-            if kind == "oom" and hi - lo >= max(
-                    2, 2 * max(int(opts.min_shard_points), 1)):
-                mid = lo + (hi - lo) // 2
-                n_splits += 1
-                queue.appendleft((mid, hi, 1, splits + 1))
-                queue.appendleft((lo, mid, 1, splits + 1))
-            elif kind == "transient" and attempt < int(opts.max_retries):
-                n_retries += 1
-                opts.sleep(float(opts.backoff_s) * 2 ** (attempt - 1))
-                queue.appendleft((lo, hi, attempt + 1, splits))
+    dispatch_wait_s = 0.0
+    done_ranges: Set[Tuple[int, int]] = set()
+    graceful = True
+
+    def fail(task: ShardTask, kind: str, error: str) -> None:
+        nonlocal n_retries, n_splits
+        if kind == "oom" and task.hi - task.lo >= max(
+                2, 2 * max(int(opts.min_shard_points), 1)):
+            mid = task.lo + (task.hi - task.lo) // 2
+            n_splits += 1
+            pending.appendleft(ShardTask(mid, task.hi, 1,
+                                         task.splits + 1))
+            pending.appendleft(ShardTask(task.lo, mid, 1,
+                                         task.splits + 1))
+        elif kind == "transient" and task.attempt < int(opts.max_retries):
+            n_retries += 1
+            opts.sleep(float(opts.backoff_s) * 2 ** (task.attempt - 1))
+            pending.appendleft(dataclasses.replace(
+                task, attempt=task.attempt + 1))
+        else:
+            quarantined.append(_quarantine(
+                checkpoint_dir, task.lo, task.hi, kind=kind, error=error,
+                attempts=task.attempt))
+
+    try:
+        while pending or executor.n_inflight:
+            while pending and executor.idle():
+                task = pending.popleft()
+                die = False
+                if opts.faults is not None:
+                    try:
+                        opts.faults.check(task.lo, task.hi, task.attempt,
+                                          n_completed=n_completed)
+                    except BaseException as exc:  # noqa: BLE001
+                        kind = classify_failure(exc)
+                        if isinstance(exc, KillWorker) \
+                                and executor.can_kill_worker:
+                            # submit with the die flag: the TARGET worker
+                            # SIGKILLs itself with this shard in flight,
+                            # exercising the real death/respawn path
+                            die = True
+                        else:
+                            executed.append({
+                                "lo": task.lo, "hi": task.hi,
+                                "attempt": task.attempt,
+                                "status": "fault", "kind": kind,
+                                "error": str(exc)})
+                            if kind == "kill":
+                                raise   # simulated SIGKILL: no cleanup
+                            fail(task, kind, str(exc))
+                            continue
+                executor.submit(task, die=die)
+            if executor.n_inflight == 0:
+                continue                # every submission faulted
+            t0_wait = time.perf_counter()
+            out = executor.wait_any()
+            dispatch_wait_s += time.perf_counter() - t0_wait
+            task = out.task
+            if out.ok:
+                entry = {"lo": task.lo, "hi": task.hi,
+                         "attempt": task.attempt, "status": "ok"}
+                if out.worker is not None:
+                    entry["worker"] = out.worker
+                if (task.lo, task.hi) in done_ranges:
+                    # duplicate redelivery (a retried shard whose first
+                    # completion was salvaged from a dying worker):
+                    # merging is dedup-safe, but don't double-checkpoint
+                    entry["duplicate"] = True
+                    executed.append(entry)
+                    continue
+                done_ranges.add((task.lo, task.hi))
+                writer.submit(task.lo, task.hi, out.payload,
+                              attempts=task.attempt, splits=task.splits)
+                results.append(out.result)
+                executed.append(entry)
+                n_completed += 1
             else:
-                quarantined.append(_quarantine(
-                    checkpoint_dir, lo, hi, kind=kind, error=str(exc),
-                    attempts=attempt))
-            continue
-        write_shard(checkpoint_dir, lo, hi, st.to_payload(),
-                    attempts=attempt, splits=splits)
-        qpath = shard_path(checkpoint_dir, lo, hi, quarantined=True)
-        if os.path.exists(qpath):       # range recovered on a later run
-            os.remove(qpath)
-        results.append(st)
-        executed.append({"lo": lo, "hi": hi, "attempt": attempt,
-                         "status": "ok"})
-        n_completed += 1
+                entry = {"lo": task.lo, "hi": task.hi,
+                         "attempt": task.attempt, "status": "fault",
+                         "kind": out.kind, "error": out.error}
+                if out.worker is not None:
+                    entry["worker"] = out.worker
+                executed.append(entry)
+                if out.kind == "kill":
+                    raise out.exc       # simulated SIGKILL: no cleanup
+                fail(task, out.kind, out.error)
+    except BaseException as exc:  # noqa: BLE001 - re-raised below
+        if classify_failure(exc) == "kill":
+            # abrupt teardown: workers are killed, not drained — but the
+            # writer still publishes shards that COMPLETED before the
+            # kill point, so the drill's on-disk state is deterministic
+            graceful = False
+        raise
+    finally:
+        executor.close(graceful=graceful)
+        writer.close()                  # flush-and-barrier (never raises)
+    writer.raise_if_failed()
 
     # ----- merge + report -------------------------------------------------
     if not results:
@@ -295,13 +359,20 @@ def run_campaign(space, checkpoint_dir: str, *, k: int = 16,
         "coverage": [[lo, hi] for lo, hi in coverage],
         "missing": [[lo, hi] for lo, hi in missing],
         "partial": bool(missing), "wall_s": time.perf_counter() - t0,
+        "workers": n_workers,
+        "dispatch_wait_s": round(dispatch_wait_s, 6),
+        "io_s": round(writer.io_s, 6),
+        "io_overlap_frac": round(writer.io_overlap_frac, 6),
+        "worker_startup_s": round(getattr(executor, "startup_s", 0.0), 6),
+        "worker_step_compiles": sorted(
+            getattr(executor, "worker_step_compiles", {}).values()),
     }
     atomic_write_json(os.path.join(checkpoint_dir, REPORT_NAME), report)
     return _stream_to_explore(space, merged, campaign=report)
 
 
 def resume(manifest_path: str, *, space=None, mesh=None,
-           backend: str = "auto",
+           backend: str = "auto", workers: Optional[int] = None,
            options: Optional[CampaignOptions] = None,
            on_corrupt: str = "refuse"):
     """Resume a campaign from its manifest (path or directory).
@@ -319,4 +390,5 @@ def resume(manifest_path: str, *, space=None, mesh=None,
     if space is None:
         space = manifest.rebuild_space()
     return run_campaign(space, directory, mesh=mesh, backend=backend,
-                        options=options, on_corrupt=on_corrupt)
+                        workers=workers, options=options,
+                        on_corrupt=on_corrupt)

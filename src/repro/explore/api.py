@@ -248,7 +248,7 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
             index_range: Optional[Tuple[int, int]] = None,
             pipeline_depth: int = 4, superchunk: Optional[int] = None,
             backend: str = "auto", checkpoint_dir: Optional[str] = None,
-            campaign=None) -> ExploreResult:
+            campaign=None, workers: Optional[int] = None) -> ExploreResult:
     """Score a :class:`DesignSpace`; one entry point for every engine.
 
     ``k`` bounds the top-k winner list, ``metric`` is any model output
@@ -277,7 +277,10 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     dispatching only what's missing (see :mod:`repro.campaign`).
     ``campaign`` optionally passes a
     :class:`~repro.campaign.CampaignOptions`; the campaign report lands
-    on ``result.campaign``.
+    on ``result.campaign``.  ``workers`` (campaigns only) runs shards on
+    that many persistent worker processes with overlapped checkpoint
+    I/O — default 1 (serial, bit-identical to an unsharded sweep;
+    ``REPRO_CAMPAIGN_WORKERS`` overrides the default).
     """
     if not isinstance(space, DesignSpace):
         raise TypeError(f"explore() takes a DesignSpace, got "
@@ -286,10 +289,12 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     if metric not in OUT_KEYS:
         raise KeyError(f"unknown metric {metric!r}; valid: "
                        f"{sorted(OUT_KEYS)}")
-    if checkpoint_dir is not None or campaign is not None:
+    if checkpoint_dir is not None or campaign is not None \
+            or workers is not None:
         if checkpoint_dir is None:
-            raise ValueError("campaign= options require checkpoint_dir= "
-                             "(the campaign's durable state directory)")
+            name = "campaign=" if campaign is not None else "workers="
+            raise ValueError(f"{name} options require checkpoint_dir= "
+                             f"(the campaign's durable state directory)")
         for name, val in (("strict", strict or None),
                           ("index_range", index_range),
                           ("progress", progress)):
@@ -302,7 +307,8 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
                             engine=engine, chunk_size=chunk_size,
                             superchunk=superchunk,
                             block_points=block_points, mesh=mesh,
-                            backend=backend, options=campaign)
+                            backend=backend, workers=workers,
+                            options=campaign)
     engine = _resolve_engine(engine, space, chunk_size, index_range)
 
     if engine in ("monolithic", "chunked"):

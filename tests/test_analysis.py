@@ -58,7 +58,7 @@ def test_all_rule_families_registered():
             "jit-unhashable-static", "jit-mutable-global",
             "jit-donated-reuse",
             "axis-hook-coverage", "axis-col-coverage",
-            "unit-dim"} <= names
+            "unit-dim", "dispatch-loop-sync"} <= names
 
 
 # ---------------------------------------------------------------------------
@@ -505,3 +505,62 @@ def test_parse_error_is_reported(tmp_path):
     bad = _write(tmp_path, "bad.py", "def f(:\n")
     findings = analyze_paths([bad])
     assert [f.rule for f in findings] == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# dispatch-loop-sync: unconditional drains inside a dispatch loop
+# ---------------------------------------------------------------------------
+DISPATCH_LOOP = """
+    import jax
+
+    def sweep(bank, state, chunks, pipeline_depth):
+        exe, keys = _fused_exec(bank)
+        inflight = []
+        for d0 in chunks:
+            state, counts = exe(d0, state)
+            inflight.append(counts)
+            {pacing}
+        jax.block_until_ready(state)          # post-loop barrier: fine
+        return jax.device_get(state)          # outside the loop: fine
+"""
+
+
+def _dispatch_case(tmp_path, pacing):
+    path = _write(tmp_path, "drv.py", DISPATCH_LOOP.format(pacing=pacing))
+    return analyze_paths([path], rules=["dispatch-loop-sync"])
+
+
+def test_unconditional_loop_sync_is_flagged(tmp_path):
+    findings = _dispatch_case(
+        tmp_path, "jax.block_until_ready(inflight.pop(0))")
+    assert [f.rule for f in findings] == ["dispatch-loop-sync"]
+    assert "EVERY iteration" in findings[0].message
+    # device_get in the loop body is the same serialization
+    findings = _dispatch_case(tmp_path, "host = jax.device_get(counts)")
+    assert [f.rule for f in findings] == ["dispatch-loop-sync"]
+
+
+def test_depth_guarded_pacing_passes(tmp_path):
+    findings = _dispatch_case(
+        tmp_path,
+        "if len(inflight) > pipeline_depth:\n"
+        "                jax.block_until_ready(inflight.pop(0))")
+    assert findings == []
+
+
+def test_loop_without_executable_dispatch_passes(tmp_path):
+    # draining a results list is not a dispatch loop
+    path = _write(tmp_path, "drain.py", """
+        import jax
+
+        def drain(results):
+            for r in results:
+                jax.block_until_ready(r)
+    """)
+    assert analyze_paths([path], rules=["dispatch-loop-sync"]) == []
+
+
+def test_shipped_drivers_pass_dispatch_loop_sync():
+    findings = analyze_paths([f"{SRC}/core/shard_sweep.py"],
+                             rules=["dispatch-loop-sync"])
+    assert findings == [], "\n".join(f.render() for f in findings)
