@@ -35,9 +35,13 @@ METRICS = ("mega_points_per_sec_1dev", "mega_points_per_sec_8dev")
 #: kernel_mode / tuned_host keep execution lanes apart (pre-backend rows
 #: lack the keys, so they compare as a distinct — legacy — lane), and
 #: cpus keeps differently-sized hosts apart (the history already holds
-#: mega_sweep rows mixing cpus: 2 and cpus: 1)
+#: mega_sweep rows mixing cpus: 2 and cpus: 1).  clients /
+#: coalesced_groups / cache_hit_rate keep serve_bench rows with
+#: different tenant counts or serving mixes apart (a 24-client load-test
+#: row must never baseline an 8-client row)
 COMPARABLE = ("schema", "bench", "mega_n_points", "devices", "cpus",
-              "backend", "kernel_mode", "tuned_host", "workers")
+              "backend", "kernel_mode", "tuned_host", "workers",
+              "clients", "coalesced_groups", "cache_hit_rate")
 
 
 def comparable(a: dict, b: dict) -> bool:

@@ -794,6 +794,139 @@ def campaign_parallel(emit_json: bool = True) -> List[str]:
             f" parity={parity}"]
 
 
+# grids for the serve bench: each client sweeps a distinct-but-shape-
+# compatible space (different vdd_scale values, same axis lengths), so
+# the concurrent wave coalesces into shared dispatch groups on ONE step
+# executable; the second, identical wave must be served entirely from
+# the result cache.  Shrink with SERVE_BENCH_GRIDS_JSON for smoke runs.
+_SERVE_GRIDS = {
+    "cis_node": [180., 130., 90., 65., 45., 28.],
+    "frame_rate": [float(v) for v in range(10, 250, 10)],
+    "sys_rows": [float(v) for v in range(8, 136, 8)],
+    "pixel_pitch_um": [1.0 + 0.5 * i for i in range(10)],
+}
+
+
+def serve_bench(emit_json: bool = True) -> List[str]:
+    """Exploration service: concurrent tenants vs sequential solo calls.
+
+    Baseline: N sequential solo ``explore()`` calls over N distinct
+    same-shape spaces.  Serve side: the same N requests submitted
+    concurrently (wave 1 — coalesced dispatch), then repeated (wave 2 —
+    result-cache replay).  Asserts the one-executable invariant across
+    solo + serve, rel-1e-6 top-k parity per tenant, a fully-cached
+    second wave with zero new dispatches, and — on the default lane —
+    an aggregate requests/s floor over the sequential baseline
+    (``SERVE_BENCH_MIN_SPEEDUP``, default 1.2: the window latency and
+    scheduler overhead must cost less than the cache wins back).
+    """
+    import threading
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info)
+    from repro.explore import DesignSpace, explore
+    from repro.serve import ExploreService
+
+    clients = int(os.environ.get("SERVE_BENCH_CLIENTS", "8"))
+    grids = json.loads(os.environ.get("SERVE_BENCH_GRIDS_JSON",
+                                      json.dumps(_SERVE_GRIDS)))
+    chunk = int(os.environ.get("SERVE_BENCH_CHUNK", 1 << 12))
+    default_lane = ("SERVE_BENCH_GRIDS_JSON" not in os.environ
+                    and "SERVE_BENCH_CHUNK" not in os.environ)
+
+    def mkspace(i):
+        return DesignSpace(["edgaze"],
+                           dict(grids,
+                                vdd_scale=[0.80 + 0.002 * i, 1.0]))
+
+    spaces = [mkspace(i) for i in range(clients)]
+    stream_cache_clear()
+    explore(spaces[0], k=8, engine="fused",
+            chunk_size=chunk)                           # warm compile
+    t0 = time.perf_counter()
+    solos = [explore(s, k=8, engine="fused", chunk_size=chunk)
+             for s in spaces]
+    solo_s = time.perf_counter() - t0
+    assert stream_cache_info()["step_compiles"] == 1
+
+    svc = ExploreService(coalesce_window_s=0.05)
+
+    def wave():
+        out = {}
+
+        def client(i):
+            out[i] = svc.explore(spaces[i], k=8, engine="fused",
+                                 chunk_size=chunk)
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return out, time.perf_counter() - t0
+
+    wave1, wave1_s = wave()
+    wave2, wave2_s = wave()
+    metrics = svc.metrics()
+    svc.close()
+
+    assert stream_cache_info()["step_compiles"] == 1, (
+        "serving must ride the ONE solo-warmed step executable")
+
+    def _key(res):
+        return [(round(r["total_j"], 12), r["variant"], r["index"])
+                for r in res.topk]
+    parity = all(_key(wave1[i]) == _key(solos[i])
+                 and _key(wave2[i]) == _key(solos[i])
+                 for i in range(clients))
+    assert parity, "served top-k diverged from solo explore()"
+    assert all(r.serve["cache_hit"] and r.serve["dispatches"] == 0
+               for r in wave2.values()), (
+        "wave 2 must be served entirely from the result cache")
+
+    hit_rate = metrics["cache"]["hits"] / max(metrics["submitted"], 1)
+    serve_s = wave1_s + wave2_s
+    serve_rps = 2 * clients / max(serve_s, 1e-9)
+    solo_rps = clients / max(solo_s, 1e-9)
+    speedup = serve_rps / solo_rps
+    min_speedup = float(os.environ.get("SERVE_BENCH_MIN_SPEEDUP", "1.2"))
+    if default_lane:
+        assert speedup >= min_speedup, (
+            f"aggregate serve throughput {serve_rps:.2f} req/s is only "
+            f"{speedup:.2f}x the sequential baseline {solo_rps:.2f} "
+            f"req/s (floor {min_speedup}x)")
+
+    rec = {"backend": solos[0].backend,
+           "kernel_mode": solos[0].stream_result.kernel_mode,
+           "clients": clients,
+           "coalesced_groups": metrics["coalesced_groups"],
+           "cache_hit_rate": round(hit_rate, 4),
+           "serve_n_points": spaces[0].n_points,
+           "serve_max_group": metrics["max_group"],
+           "serve_solo_s": round(solo_s, 4),
+           "serve_wall_s": round(serve_s, 4),
+           "serve_requests_per_sec": round(serve_rps, 4),
+           "solo_requests_per_sec": round(solo_rps, 4),
+           "serve_speedup": round(speedup, 4),
+           "serve_step_compiles":
+               stream_cache_info()["step_compiles"],
+           "serve_parity": parity}
+    if emit_json:
+        _update_bench_json(rec)
+        import jax
+        _append_history("serve_bench", rec,
+                        devices=jax.local_device_count())
+    return [f"serve_bench,{serve_s*1e6:.0f},"
+            f"clients={clients} points={rec['serve_n_points']}"
+            f" speedup={speedup:.2f}x"
+            f" rps={serve_rps:.2f} solo_rps={solo_rps:.2f}"
+            f" groups={rec['coalesced_groups']}"
+            f" max_group={rec['serve_max_group']}"
+            f" hit_rate={hit_rate:.2f}"
+            f" executables={rec['serve_step_compiles']}"
+            f" parity={parity}"]
+
+
 def roofline_table() -> List[str]:
     """§Roofline summary from the dry-run results (if present)."""
     path = os.path.join(RESULTS, "dryrun.json")
@@ -817,7 +950,8 @@ def roofline_table() -> List[str]:
 
 BENCHES = [fig7_validation, fig9a_rhythmic, fig9b_edgaze, tbl3_power_density,
            fig12_stage_breakdown, kernel_microbench, design_sweep,
-           mega_sweep, campaign_sweep, campaign_parallel, roofline_table]
+           mega_sweep, campaign_sweep, campaign_parallel, serve_bench,
+           roofline_table]
 
 
 _EPILOG = """\
@@ -853,6 +987,17 @@ environment knobs:
                          steady-state workers=2 speedup floor (default
                          1.5), asserted only on the default lane on
                          hosts with >= 2 cores.
+  SERVE_BENCH_CLIENTS    concurrent tenants in the serve_bench lane
+                         (default 8; the CI serve job raises it for the
+                         load test).
+  SERVE_BENCH_GRIDS_JSON / SERVE_BENCH_CHUNK
+                         shrink the serve_bench per-client space for
+                         smoke runs; either set marks the lane
+                         non-default, which skips the speedup assert.
+  SERVE_BENCH_MIN_SPEEDUP
+                         aggregate served-requests/s floor over the
+                         sequential solo baseline (default 1.2),
+                         asserted only on the default lane.
   BENCH_COMPILE_CACHE_DIR
                          persistent XLA compile cache location.
 """

@@ -30,6 +30,12 @@ returns the same ``ExploreResult`` shape:
    JAX runtime and ONE step executable each — with checkpoint
    serialization overlapped on a background writer thread; the merged
    top-k bit-matches the serial path.
+7. SERVING: a long-lived ``ExploreService`` turns ``explore()`` into a
+   multi-tenant request/response surface — two concurrent tenants with
+   distinct same-shape spaces coalesce onto ONE shared step executable,
+   a repeated request replays from the TTL+LRU result cache with zero
+   new dispatches, and each result carries its serving metrics
+   (``result.serve``: queue wait, coalesce group, dispatch share).
 
 Also shows the CamJ-for-TPU bridge on the dry-run results, if present:
 the same component-energy methodology applied to the 256-chip training
@@ -242,6 +248,63 @@ def main():
           f"{match}")
     assert match and set(rep["worker_step_compiles"]) == {1}
     shutil.rmtree(par_dir, ignore_errors=True)
+
+    # ----- Serving: multi-tenant explore() through one service ------------
+    # ExploreService fronts the streaming engines with a bounded request
+    # queue, a coalescing scheduler and a result cache.  explore(space,
+    # service=svc) is a drop-in routed call: concurrent tenants whose
+    # spaces resolve to the same dispatch shapes ride ONE shared step
+    # executable (different axis VALUES are fine — they're traced
+    # inputs), and a repeat of an already-answered request never
+    # dispatches at all.
+    import threading
+    from repro.serve import ExploreService
+
+    def tenant_space(vdd_lo):
+        return DesignSpace(["edgaze"], {
+            "cis_node": [130, 65, 28],
+            "frame_rate": [30, 60, 120],
+            "vdd_scale": [vdd_lo, 1.0]})
+
+    compiles_before = stream_cache_info()["step_compiles"]
+    with ExploreService(coalesce_window_s=0.2) as svc:
+        served = {}
+
+        def tenant(name, vdd_lo):
+            served[name] = explore(tenant_space(vdd_lo), k=3,
+                                   engine="fused", chunk_size=8,
+                                   service=svc)
+
+        threads = [threading.Thread(target=tenant, args=("low", 0.80)),
+                   threading.Thread(target=tenant, args=("high", 0.95))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        replay = explore(tenant_space(0.80), k=3, engine="fused",
+                         chunk_size=8, service=svc)
+        metrics = svc.metrics()
+
+    print("\n=== Exploration service: two coalesced tenants ===")
+    for name, res in served.items():
+        s = res.serve
+        print(f"tenant {name:<5} best {res.metric}="
+              f"{res.topk[0][res.metric]:.3e}  group="
+              f"{s['coalesce_group']} dispatches={s['dispatches']} "
+              f"share={s['dispatch_share']:.2f} "
+              f"wait={s['queue_wait_s']*1e3:.0f}ms")
+    new_compiles = (stream_cache_info()["step_compiles"]
+                    - compiles_before)
+    print(f"new step executables for both tenants: {new_compiles}")
+    print(f"replayed request: cache_hit={replay.serve['cache_hit']} "
+          f"dispatches={replay.serve['dispatches']}")
+    print(f"service counters: completed={metrics['completed']} "
+          f"coalesced_groups={metrics['coalesced_groups']} "
+          f"cache_hits={metrics['cache']['hits']}")
+    assert served["low"].serve["coalesce_group"] == 2
+    assert replay.serve["cache_hit"] \
+        and replay.serve["dispatches"] == 0
+    assert new_compiles <= 1   # one shared compile (0 if already warm)
 
     path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "results", "dryrun.json")

@@ -30,6 +30,7 @@ DEFAULT_PATHS: Tuple[str, ...] = (
     os.path.join(_PKG_ROOT, "core"),
     os.path.join(_PKG_ROOT, "kernels"),
     os.path.join(_PKG_ROOT, "explore"),
+    os.path.join(_PKG_ROOT, "serve"),
 )
 
 _NOQA_RE = re.compile(

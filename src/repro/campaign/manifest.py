@@ -58,6 +58,10 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from ..ckpt import (atomic_write_json, payload_checksum, read_json)
+# the signature functions moved to repro.signatures (shared with the
+# serve result cache); re-imported here so every pre-existing
+# `from repro.campaign.manifest import space_signature` keeps working
+from ..signatures import bank_signature, space_signature  # noqa: F401
 
 MANIFEST_SCHEMA = 1
 MANIFEST_NAME = "manifest.json"
@@ -101,48 +105,6 @@ def _grids_payload(grids: Optional[Dict]) -> Dict:
         out[ax] = [v if isinstance(v, str) else float(v)
                    for v in list(vals)]
     return out
-
-
-def space_signature(space) -> str:
-    """sha256 over the RESOLVED design space.
-
-    Covers the ordered ``(algorithm, variant)`` slots, ``soc_node``, the
-    grid shape and every resolved axis value list (mem_tech names already
-    coded) — everything that determines which design point a flat stream
-    index decodes to.
-    """
-    payload = {
-        "algorithms": list(space.algorithms),
-        "soc_node": int(space.soc_node),
-        "variants": [list(lv) for lv in space.variant_labels],
-        "shape": list(space.shape),
-        "axes": {ax: [float(v) for v in vals]
-                 for ax, vals in sorted(space._ngrids.items())},
-    }
-    return payload_checksum(payload)
-
-
-def bank_signature(space) -> str:
-    """sha256 over the PlanBank dims + fused column layout.
-
-    Shard results are only mergeable with a bank that packs coefficients
-    into the same ``(V, W)`` columns; any layout drift (new axis column,
-    different unit padding) must refuse to resume even when the design
-    space itself is unchanged.
-    """
-    from ..core.plan_bank import bank_layout, build_plan_bank
-    from ..core.sweep import lower_variant
-    plans = [lower_variant(algo, variant, soc_node=space.soc_node)
-             for algo, variant in space.variant_labels]
-    bank = build_plan_bank(plans)
-    layout = bank_layout(bank.dims)
-    payload = {
-        "dims": {f: int(getattr(bank.dims, f))
-                 for f in bank.dims._fields},
-        "layout": {name: [int(off), [int(s) for s in shape]]
-                   for name, (off, shape) in sorted(layout.items())},
-    }
-    return payload_checksum(payload)
 
 
 def plan_shards(total: int, shard_points: int) -> List[Tuple[int, int]]:

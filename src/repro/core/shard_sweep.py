@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 import time
 import warnings
 from collections import OrderedDict
@@ -197,6 +198,14 @@ def evaluate_batch_sharded(plan: EnergyPlan, points: DesignPoints, *,
 #: evict the stalest executable instead of growing without bound.
 _STREAM_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _STREAM_STATS = {"step_compiles": 0, "hits": 0, "evictions": 0}
+#: guards the executable cache + its counters: concurrent explore()
+#: calls (thread-pool tenants, the serve facade) must never observe torn
+#: counters or double-compile one key, so the whole get-or-compile
+#: section of the *_exec factories runs under this lock — the second
+#: thread to request a cold key blocks behind the first's compile and
+#: then takes the hit path.  Reentrant: a compile that re-enters a
+#: cache helper on the same thread must not self-deadlock.
+_STREAM_LOCK = threading.RLock()
 
 
 def _coerce_cache_limit(value, source: str) -> int:
@@ -229,14 +238,16 @@ _EXTRA_CACHES.append(_STREAM_CACHE)     # flushed by lower_cache_clear()
 def stream_cache_info() -> Dict[str, int]:
     """Executable-cache counters for the one-executable invariant tests
     (plus LRU ``size`` / ``limit`` / ``evictions`` accounting)."""
-    return dict(_STREAM_STATS, size=len(_STREAM_CACHE),
-                limit=_STREAM_CACHE_LIMIT)
+    with _STREAM_LOCK:
+        return dict(_STREAM_STATS, size=len(_STREAM_CACHE),
+                    limit=_STREAM_CACHE_LIMIT)
 
 
 def stream_cache_clear() -> None:
-    _STREAM_CACHE.clear()
-    for key in _STREAM_STATS:
-        _STREAM_STATS[key] = 0
+    with _STREAM_LOCK:
+        _STREAM_CACHE.clear()
+        for key in _STREAM_STATS:
+            _STREAM_STATS[key] = 0
 
 
 def set_stream_cache_limit(limit: int) -> int:
@@ -244,27 +255,30 @@ def set_stream_cache_limit(limit: int) -> int:
     previous limit.  Shrinking evicts stalest entries immediately."""
     global _STREAM_CACHE_LIMIT
     limit = _coerce_cache_limit(limit, "set_stream_cache_limit()")
-    old, _STREAM_CACHE_LIMIT = _STREAM_CACHE_LIMIT, limit
-    while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
-        _STREAM_CACHE.popitem(last=False)
-        _STREAM_STATS["evictions"] += 1
+    with _STREAM_LOCK:
+        old, _STREAM_CACHE_LIMIT = _STREAM_CACHE_LIMIT, limit
+        while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
+            _STREAM_CACHE.popitem(last=False)
+            _STREAM_STATS["evictions"] += 1
     return old
 
 
 def _cache_get(key):
-    hit = _STREAM_CACHE.get(key)
-    if hit is not None:
-        _STREAM_CACHE.move_to_end(key)
-        _STREAM_STATS["hits"] += 1
-    return hit
+    with _STREAM_LOCK:
+        hit = _STREAM_CACHE.get(key)
+        if hit is not None:
+            _STREAM_CACHE.move_to_end(key)
+            _STREAM_STATS["hits"] += 1
+        return hit
 
 
 def _cache_put(key, entry) -> None:
-    _STREAM_CACHE[key] = entry
-    _STREAM_CACHE.move_to_end(key)
-    while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
-        _STREAM_CACHE.popitem(last=False)
-        _STREAM_STATS["evictions"] += 1
+    with _STREAM_LOCK:
+        _STREAM_CACHE[key] = entry
+        _STREAM_CACHE.move_to_end(key)
+        while len(_STREAM_CACHE) > _STREAM_CACHE_LIMIT:
+            _STREAM_CACHE.popitem(last=False)
+            _STREAM_STATS["evictions"] += 1
 
 
 def _validate_index_range(index_range, total: int) -> Tuple[int, int]:
@@ -452,27 +466,28 @@ def _banked_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     key = ("banked", _mesh_key(mesh), chunk, metric, k, block_points,
            tuple(bank.dims), tuple(shape), n_var, lmax,
            jnp.dtype(idx_dtype).name)
-    hit = _cache_get(key)
-    if hit is not None:
-        return hit
-    chunk_step, out_keys = _banked_step(bank, mesh, metric, k, chunk,
-                                        block_points, shape, n_var,
-                                        idx_dtype)
-    zero = jnp.asarray(0, idx_dtype)
-    state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
-                                idx_dtype)
-    exe = jax.jit(chunk_step, donate_argnums=(4,)).lower(
-        zero, zero, tables, bank.arrays, state0).compile(
-        compiler_options=_compiler_opts())
-    _STREAM_STATS["step_compiles"] += 1
-    # warm the dispatch path on a no-op chunk: limit=0 makes every point
-    # invalid, so counts are 0, every candidate metric is +inf and the
-    # state is semantically untouched
-    state0, counts = exe(zero, zero, tables, bank.arrays, state0)
-    jax.block_until_ready(counts)
-    entry = (exe, out_keys)
-    _cache_put(key, entry)
-    return entry
+    with _STREAM_LOCK:
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
+        chunk_step, out_keys = _banked_step(bank, mesh, metric, k, chunk,
+                                            block_points, shape, n_var,
+                                            idx_dtype)
+        zero = jnp.asarray(0, idx_dtype)
+        state0 = _init_banked_state(k, len(out_keys),
+                                    bank.dims.n_variants, idx_dtype)
+        exe = jax.jit(chunk_step, donate_argnums=(4,)).lower(
+            zero, zero, tables, bank.arrays, state0).compile(
+            compiler_options=_compiler_opts())
+        _STREAM_STATS["step_compiles"] += 1
+        # warm the dispatch path on a no-op chunk: limit=0 makes every
+        # point invalid, so counts are 0, every candidate metric is +inf
+        # and the state is semantically untouched
+        state0, counts = exe(zero, zero, tables, bank.arrays, state0)
+        jax.block_until_ready(counts)
+        entry = (exe, out_keys)
+        _cache_put(key, entry)
+        return entry
 
 
 def _compiler_opts():
@@ -624,28 +639,31 @@ def _fused_exec(bank: PlanBank, mesh, metric: str, k: int, chunk: int,
     key = ("fused", backend, _mesh_key(mesh), chunk, metric, k,
            block_points, tuple(bank.dims), tuple(shape), n_var, lmax,
            s_len, cpv, jnp.dtype(idx_dtype).name)
-    hit = _cache_get(key)
-    if hit is not None:
-        return hit
-    superchunk, out_keys = _fused_step(bank, mesh, metric, k, chunk,
-                                       block_points, shape, n_var, lmax,
-                                       idx_dtype, s_len, cpv,
-                                       backend=backend)
-    zero = jnp.asarray(0, idx_dtype)
-    state0 = _init_banked_state(k, len(out_keys), bank.dims.n_variants,
-                                idx_dtype, with_out=False)
-    exe = jax.jit(superchunk, donate_argnums=(6,)).lower(
-        zero, zero, zero, zero, table2, bank.arrays, state0).compile(
-        compiler_options=_compiler_opts())
-    _STREAM_STATS["step_compiles"] += 1
-    # warm the dispatch path on an all-dead superchunk: c_hi=0 turns
-    # every scan slot into a limit=0 no-op, leaving the state untouched
-    state0, counts = exe(zero, zero, zero, zero, table2, bank.arrays,
-                         state0)
-    jax.block_until_ready(counts)
-    entry = (exe, out_keys)
-    _cache_put(key, entry)
-    return entry
+    with _STREAM_LOCK:
+        hit = _cache_get(key)
+        if hit is not None:
+            return hit
+        superchunk, out_keys = _fused_step(bank, mesh, metric, k, chunk,
+                                           block_points, shape, n_var,
+                                           lmax, idx_dtype, s_len, cpv,
+                                           backend=backend)
+        zero = jnp.asarray(0, idx_dtype)
+        state0 = _init_banked_state(k, len(out_keys),
+                                    bank.dims.n_variants, idx_dtype,
+                                    with_out=False)
+        exe = jax.jit(superchunk, donate_argnums=(6,)).lower(
+            zero, zero, zero, zero, table2, bank.arrays, state0).compile(
+            compiler_options=_compiler_opts())
+        _STREAM_STATS["step_compiles"] += 1
+        # warm the dispatch path on an all-dead superchunk: c_hi=0 turns
+        # every scan slot into a limit=0 no-op, leaving the state
+        # untouched
+        state0, counts = exe(zero, zero, zero, zero, table2, bank.arrays,
+                             state0)
+        jax.block_until_ready(counts)
+        entry = (exe, out_keys)
+        _cache_put(key, entry)
+        return entry
 
 
 @dataclasses.dataclass
@@ -865,6 +883,9 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
                  pipeline_depth: int = 4, engine: str = "fused",
                  superchunk: Optional[int] = None,
                  backend: str = "auto",
+                 on_partial: Optional[
+                     Callable[[int, int, Callable[[], "StreamResult"]],
+                              None]] = None,
                  _prepared: Optional[_StreamPrep] = None) -> StreamResult:
     """Stream a cartesian sweep of any size through ONE executable.
 
@@ -895,6 +916,17 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
     automatically.  ``index_range=(lo, hi)`` streams only that slice of
     the flat index space (multi-host partitioning hook);
     ``progress(done, span)`` fires after every dispatch.
+
+    ``on_partial(done, span, snapshot)`` is the partial-result hook (the
+    serve layer's streaming-top-k seam): it fires alongside ``progress``
+    after every dispatch, and calling the zero-arg ``snapshot()``
+    materializes the reduction state SO FAR as a :class:`StreamResult`
+    (same finalization as the final result — top-k rows, summaries,
+    accounting).  A snapshot drains the in-flight pipeline (device sync
+    + O(k) winner re-gather), so callers throttle how often they take
+    one; the snapshot closure is only valid until the NEXT dispatch
+    (the state buffer is donated), so call it synchronously inside the
+    hook or not at all.
 
     ``backend`` selects the fused megakernel implementation: "pallas"
     (``pallas_call``: Mosaic on TPU, interpreter elsewhere), "xla" (the
@@ -947,6 +979,81 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
     dispatches = 0
     dispatched_points = 0
     s_len = 1
+
+    def _finalize(state, out_keys, n_dispatches, n_dispatched, eval_s,
+                  covered) -> StreamResult:
+        """Materialize the device reduction state as a StreamResult.
+
+        Runs once at the end of the sweep and, through the
+        ``on_partial`` snapshot closure, for every partial-result
+        request mid-stream (``covered`` is the points reduced so far;
+        per-variant ``n`` in summaries always describes the full
+        ``[lo, hi)`` span the state is converging to).  All host work
+        is O(k) / O(variants).
+        """
+        host = jax.device_get(state)
+        # per-variant valid counts are range arithmetic on the variant-
+        # major flat index space — never computed on device
+        n_seen = _variant_span_counts(lo, hi, n_var, n_variants)
+
+        summaries: Dict[str, Dict] = {}
+        n_feasible = 0
+        for vi, label in enumerate(labels):
+            nf = int(host["n_feasible"][vi])
+            n_feasible += nf
+            amin = int(host["argmin"][vi])
+            summaries[label] = dict(
+                n=int(n_seen[vi]), n_feasible=nf,
+                metric_min=float(host["metric_min"][vi]),
+                metric_mean=(float(host["metric_sum"][vi]) / nf if nf
+                             else float("nan")),
+                argmin_index=amin % n_var if amin >= 0 else -1,
+                argmin_point=(vgrids[vi].point(amin % n_var)
+                              if amin >= 0 else None))
+
+        n_win = 0
+        while (n_win < len(host["topk_v"])
+               and np.isfinite(host["topk_v"][n_win])):
+            n_win += 1                     # fewer than k feasible points
+        win = [divmod(int(host["topk_i"][j]), n_var)
+               for j in range(n_win)]
+        if engine == "fused" and n_win:
+            # tiny second pass over winners only: the megakernel never
+            # wrote the per-point output table, so the k winning rows
+            # re-gather their full output schema through the banked
+            # evaluator here (padded to k so every sweep shares one tiny
+            # executable)
+            pts_axes = {ax: [] for ax in AXES}
+            for vi, local in win + [win[-1]] * (k - n_win):
+                point = vgrids[vi].point(local)
+                for ax in AXES:
+                    pts_axes[ax].append(point[ax])
+            vids = [vi for vi, _ in win] + [win[-1][0]] * (k - n_win)
+            out = evaluate_bank(bank, np.asarray(vids, np.int32),
+                                make_points(plans[0], k, **pts_axes))
+            host["topk_out"] = np.stack(
+                [np.asarray(out[key], np.float32)[:n_win]
+                 for key in out_keys], axis=1)
+
+        rows: List[Dict] = []
+        for j, (vi, local) in enumerate(win):
+            row = dict(variant=vnames[vi], algorithm=valgos[vi],
+                       index=local, **vgrids[vi].point(local))
+            row.update({key: float(host["topk_out"][j][c])
+                        for c, key in enumerate(out_keys)})
+            rows.append(row)
+
+        return StreamResult(
+            algorithm="+".join(algos), metric=metric, k=k,
+            n_points=covered, n_feasible=n_feasible, n_devices=ndev,
+            chunk_size=chunk, topk=rows, summaries=summaries,
+            wall_s=time.perf_counter() - t_start,
+            compile_s=timings["compile_s"], eval_s=eval_s,
+            n_variants=n_variants, index_lo=lo, index_hi=hi,
+            engine=engine, dispatches=n_dispatches, superchunk=s_len,
+            occupancy=(covered / n_dispatched if n_dispatched else 1.0),
+            n_var=n_var, backend=backend,
+            kernel_mode=sweep_kernel_mode(backend))
     with x64_context(wide):
         # tables/bank/table2 are all-f32 (x64-independent), built once in
         # the prep — inside the context only INDEX arrays widen
@@ -992,12 +1099,24 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
                 inflight.append(counts)
                 if len(inflight) > pipeline_depth:
                     jax.block_until_ready(inflight.pop(0))
-                if progress is not None:
+                if progress is not None or on_partial is not None:
                     last = min(d0 + s_len, c_hi) - 1
                     vi_l, r_l = divmod(last, cpv)
                     end = min(vi_l * n_var + (r_l + 1) * chunk,
                               vi_l * n_var + n_var, hi)
-                    progress(max(end - lo, 0), hi - lo)
+                    done_pts = max(end - lo, 0)
+                    if progress is not None:
+                        progress(done_pts, hi - lo)
+                    if on_partial is not None:
+                        # bind loop state by value: the closure is only
+                        # valid until the next dispatch donates `state`
+                        on_partial(done_pts, hi - lo,
+                                   lambda st=state, nd=dispatches,
+                                   dpts=dispatched_points, cov=done_pts,
+                                   te=t0: _finalize(
+                                       st, out_keys, nd, dpts,
+                                       timings["eval_s"]
+                                       + time.perf_counter() - te, cov))
             jax.block_until_ready(state["n_feasible"])
             timings["eval_s"] += time.perf_counter() - t0
         else:
@@ -1033,68 +1152,17 @@ def _stream_impl(algorithm: Union[str, Sequence[str]] = "edgaze",
                     done += min(start + chunk, vhi) - start
                     if progress is not None:
                         progress(done, hi - lo)
+                    if on_partial is not None:
+                        on_partial(done, hi - lo,
+                                   lambda st=state, nd=dispatches,
+                                   dpts=dispatched_points, cov=done,
+                                   te=t0: _finalize(
+                                       st, out_keys, nd, dpts,
+                                       timings["eval_s"]
+                                       + time.perf_counter() - te, cov))
             jax.block_until_ready(state["n_feasible"])
             timings["eval_s"] += time.perf_counter() - t0
-        host = jax.device_get(state)
-    # per-variant valid counts are range arithmetic on the variant-major
-    # flat index space — never computed on device
-    n_seen = _variant_span_counts(lo, hi, n_var, n_variants)
-
-    # ----- host-side finalization (all O(k) / O(variants)) ----------------
-    summaries: Dict[str, Dict] = {}
-    n_feasible = 0
-    for vi, label in enumerate(labels):
-        nf = int(host["n_feasible"][vi])
-        n_feasible += nf
-        amin = int(host["argmin"][vi])
-        summaries[label] = dict(
-            n=int(n_seen[vi]), n_feasible=nf,
-            metric_min=float(host["metric_min"][vi]),
-            metric_mean=(float(host["metric_sum"][vi]) / nf if nf
-                         else float("nan")),
-            argmin_index=amin % n_var if amin >= 0 else -1,
-            argmin_point=(vgrids[vi].point(amin % n_var)
-                          if amin >= 0 else None))
-
-    n_win = 0
-    while (n_win < len(host["topk_v"])
-           and np.isfinite(host["topk_v"][n_win])):
-        n_win += 1                             # fewer than k feasible points
-    win = [divmod(int(host["topk_i"][j]), n_var) for j in range(n_win)]
-    if engine == "fused" and n_win:
-        # tiny second pass over winners only: the megakernel never wrote
-        # the per-point output table, so the k winning rows re-gather
-        # their full output schema through the banked evaluator here
-        # (padded to k so every sweep shares one tiny executable)
-        pts_axes = {ax: [] for ax in AXES}
-        for vi, local in win + [win[-1]] * (k - n_win):
-            point = vgrids[vi].point(local)
-            for ax in AXES:
-                pts_axes[ax].append(point[ax])
-        vids = [vi for vi, _ in win] + [win[-1][0]] * (k - n_win)
-        out = evaluate_bank(bank, np.asarray(vids, np.int32),
-                            make_points(plans[0], k, **pts_axes))
-        host["topk_out"] = np.stack(
-            [np.asarray(out[key], np.float32)[:n_win]
-             for key in out_keys], axis=1)
-
-    rows: List[Dict] = []
-    for j, (vi, local) in enumerate(win):
-        row = dict(variant=vnames[vi], algorithm=valgos[vi], index=local,
-                   **vgrids[vi].point(local))
-        row.update({key: float(host["topk_out"][j][c])
-                    for c, key in enumerate(out_keys)})
-        rows.append(row)
-
-    return StreamResult(
-        algorithm="+".join(algos), metric=metric, k=k, n_points=hi - lo,
-        n_feasible=n_feasible, n_devices=ndev, chunk_size=chunk,
-        topk=rows, summaries=summaries,
-        wall_s=time.perf_counter() - t_start,
-        compile_s=timings["compile_s"], eval_s=timings["eval_s"],
-        n_variants=n_variants, index_lo=lo, index_hi=hi,
-        engine=engine, dispatches=dispatches, superchunk=s_len,
-        occupancy=((hi - lo) / dispatched_points if dispatched_points
-                   else 1.0),
-        n_var=n_var, backend=backend,
-        kernel_mode=sweep_kernel_mode(backend))
+    # host-side finalization (all O(k) / O(variants)) — shared with the
+    # on_partial snapshot path above
+    return _finalize(state, out_keys, dispatches, dispatched_points,
+                     timings["eval_s"], hi - lo)

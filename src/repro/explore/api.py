@@ -92,6 +92,10 @@ class ExploreResult:
     #: resolved streaming execution backend ("pallas" / "xla"); None for
     #: the grid engines, which have no megakernel lane
     backend: Optional[str] = None
+    #: per-tenant serving metrics (queue wait, dispatch share, coalesce
+    #: group size, cache hit, ...) when the result came through a
+    #: :class:`repro.serve.ExploreService`; None for direct calls
+    serve: Optional[Dict] = None
 
     def __len__(self) -> int:
         return self.n_points
@@ -241,6 +245,27 @@ def _stream_to_explore(space: DesignSpace, st: StreamResult, *,
         stream_result=st, campaign=campaign, backend=st.backend)
 
 
+def _validate_request(k, chunk_size) -> None:
+    """Boundary validation shared by :func:`explore` and the serve
+    front end (``repro.serve.ExploreService.submit``)."""
+    if isinstance(k, bool) or not isinstance(k, (int, np.integer)):
+        raise ValueError(f"k must be an integer >= 1 (the top-k row "
+                         f"budget), got {k!r} of type {type(k).__name__}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1 (at least one top-k row "
+                         f"to keep), got {k}")
+    if chunk_size is not None:
+        if isinstance(chunk_size, bool) \
+                or not isinstance(chunk_size, (int, np.integer)):
+            raise ValueError(
+                f"chunk_size must be an integer >= 1 (points per "
+                f"dispatch) or None for the engine default, got "
+                f"{chunk_size!r} of type {type(chunk_size).__name__}")
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1 (points per "
+                             f"dispatch), got {chunk_size}")
+
+
 def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
             engine: str = "auto", chunk_size: Optional[int] = None,
             mesh=None, strict: bool = False, block_points: int = 4096,
@@ -248,7 +273,8 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
             index_range: Optional[Tuple[int, int]] = None,
             pipeline_depth: int = 4, superchunk: Optional[int] = None,
             backend: str = "auto", checkpoint_dir: Optional[str] = None,
-            campaign=None, workers: Optional[int] = None) -> ExploreResult:
+            campaign=None, workers: Optional[int] = None,
+            service=None) -> ExploreResult:
     """Score a :class:`DesignSpace`; one entry point for every engine.
 
     ``k`` bounds the top-k winner list, ``metric`` is any model output
@@ -281,6 +307,13 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     that many persistent worker processes with overlapped checkpoint
     I/O — default 1 (serial, bit-identical to an unsharded sweep;
     ``REPRO_CAMPAIGN_WORKERS`` overrides the default).
+
+    ``service`` routes the request through a running
+    :class:`repro.serve.ExploreService` instead of dispatching inline:
+    the call blocks like a direct ``explore()`` but the service may
+    coalesce it with concurrent compatible tenants onto one shared step
+    executable and serve repeats from its result cache
+    (``result.serve`` carries the per-tenant serving metrics).
     """
     if not isinstance(space, DesignSpace):
         raise TypeError(f"explore() takes a DesignSpace, got "
@@ -289,6 +322,24 @@ def explore(space: DesignSpace, *, k: int = 16, metric: str = "total_j",
     if metric not in OUT_KEYS:
         raise KeyError(f"unknown metric {metric!r}; valid: "
                        f"{sorted(OUT_KEYS)}")
+    _validate_request(k, chunk_size)
+    if service is not None:
+        for name, val, default in (("checkpoint_dir", checkpoint_dir,
+                                    None),
+                                   ("campaign", campaign, None),
+                                   ("workers", workers, None),
+                                   ("index_range", index_range, None),
+                                   ("progress", progress, None),
+                                   ("mesh", mesh, None),
+                                   ("strict", strict, False)):
+            if val != default:
+                raise ValueError(f"{name}= is incompatible with "
+                                 f"service= (the service owns dispatch "
+                                 f"planning; submit plain requests)")
+        return service.explore(space, k=k, metric=metric, engine=engine,
+                               chunk_size=chunk_size,
+                               block_points=block_points,
+                               superchunk=superchunk, backend=backend)
     if checkpoint_dir is not None or campaign is not None \
             or workers is not None:
         if checkpoint_dir is None:

@@ -1,0 +1,40 @@
+"""Exploration-as-a-service: multi-tenant ``explore()`` serving.
+
+A long-lived in-process service front over the streaming sweep engines:
+concurrent tenants submit :class:`~repro.explore.DesignSpace` requests
+and the service coalesces compatible ones onto ONE shared step
+executable, replays repeats from a TTL+LRU result cache, and streams
+converging partial top-k snapshots per tenant.  Start with::
+
+    from repro.serve import ExploreService
+    with ExploreService() as svc:
+        res = svc.explore(space, k=8)            # blocking, like explore()
+        res = explore(space, k=8, service=svc)   # same, via the front door
+        h = svc.submit(space, k=8, stream=True)  # non-blocking + partials
+        for update in h.partials():
+            print(update.frac, update.topk[0])
+
+See :mod:`repro.serve.service` for the scheduling model,
+:mod:`repro.serve.coalesce` for the one-executable compatibility rules,
+and :mod:`repro.serve.cache` for the replay-identity key.
+"""
+from .cache import ResultCache, result_cache_key
+from .errors import QueueFull, RequestTimeout, ServeError, ServiceClosed
+from .metrics import ServiceMetrics, TenantMetrics
+from .service import ExploreService, ServeHandle
+from .stream import PartialUpdate, TenantStream
+
+__all__ = [
+    "ExploreService",
+    "PartialUpdate",
+    "QueueFull",
+    "RequestTimeout",
+    "ResultCache",
+    "ServeError",
+    "ServeHandle",
+    "ServiceClosed",
+    "ServiceMetrics",
+    "TenantMetrics",
+    "TenantStream",
+    "result_cache_key",
+]

@@ -48,7 +48,7 @@ def test_repo_default_scope_is_clean():
 
 def test_default_paths_cover_the_hot_packages():
     tails = {p.rsplit("/", 1)[-1] for p in DEFAULT_PATHS}
-    assert tails == {"core", "kernels", "explore"}
+    assert tails == {"core", "kernels", "explore", "serve"}
 
 
 def test_all_rule_families_registered():

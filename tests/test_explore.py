@@ -197,6 +197,59 @@ def test_unknown_algorithm_variant_metric_engine_rejected():
         explore(space, engine="fused", strict=True)
 
 
+def test_k_and_chunk_size_rejected_at_the_boundary():
+    """Boundary validation (ISSUE 10): bad k / chunk_size raise
+    ValueError naming the valid range BEFORE any lowering happens."""
+    space = DesignSpace(["edgaze"], {"cis_node": [65.0]})
+    for bad_k in (0, -1, -16):
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            explore(space, k=bad_k)
+    for bad_k in (1.5, "4", None, True, np.float64(2.0)):
+        with pytest.raises(ValueError, match="k must be an integer"):
+            explore(space, k=bad_k)
+    for bad_chunk in (0, -1, -(1 << 18)):
+        with pytest.raises(ValueError, match="chunk_size must be >= 1"):
+            explore(space, chunk_size=bad_chunk)
+    for bad_chunk in (2.5, "8", False):
+        with pytest.raises(ValueError,
+                           match="chunk_size must be an integer"):
+            explore(space, chunk_size=bad_chunk)
+    # numpy integer scalars are fine (common from np.arange grids)
+    assert len(explore(space, k=np.int64(2)).topk) <= 2
+    assert explore(space, chunk_size=np.int32(4)).engine == "chunked"
+
+
+def test_concurrent_explore_compiles_once():
+    """Executable-cache thread safety (ISSUE 10): a thread pool hitting
+    one cold key must compile exactly once, count 1 miss + N-1 hits,
+    and every thread's result must agree."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.core.shard_sweep import (stream_cache_clear,
+                                        stream_cache_info)
+
+    space = DesignSpace(["edgaze"], GRIDS)
+    stream_cache_clear()
+    base = stream_cache_info()
+
+    def run(_):
+        return explore(space, k=4, engine="fused", chunk_size=8,
+                       superchunk=2)
+
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        results = list(pool.map(run, range(8)))
+
+    info = stream_cache_info()
+    assert info["step_compiles"] - base["step_compiles"] == 1
+    assert info["hits"] - base["hits"] == 7
+    ref = results[0]
+    for res in results[1:]:
+        _assert_explore_equal(res, ref)
+        np.testing.assert_allclose(
+            [r[ref.metric] for r in res.topk],
+            [r[ref.metric] for r in ref.topk], rtol=REL)
+
+
 def test_auto_engine_selection():
     space = DesignSpace(["edgaze"], {"cis_node": [130.0, 65.0]})
     assert explore(space).engine == "monolithic"

@@ -1,0 +1,442 @@
+"""ISSUE 10: exploration-as-a-service (repro.serve).
+
+The contract pillars:
+
+* **one-executable serving** — 8 concurrent clients with distinct but
+  shape-compatible spaces coalesce into one dispatch group riding ONE
+  step executable (``stream_cache_info()``), and every tenant's served
+  result matches its solo ``explore()`` at rel 1e-6;
+* **result cache** — a repeated identical request is served from the
+  cache with ZERO new dispatches; TTL / LRU bounds and the counters are
+  exact under a fake clock; execution geometry does not join the key;
+* **coalescing rules** — equal compat keys for same-shape spaces,
+  different keys across k / metric / chunk geometry; incompatible
+  requests fall back to solo dispatch, never an error;
+* **streaming partials** — monotone ``done``, increasing ``seq``,
+  exactly one final update carrying the exact final top-k; failures
+  re-raise on the consumer side;
+* **service lifecycle** — bounded-queue backpressure (``QueueFull``),
+  deadline expiry (``RequestTimeout``), closed-service rejection, and
+  graceful drain completing the backlog.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.shard_sweep import stream_cache_clear, stream_cache_info
+from repro.explore import DesignSpace, explore
+from repro.serve import (ExploreService, PartialUpdate, QueueFull,
+                         RequestTimeout, ResultCache, ServiceClosed,
+                         TenantStream, result_cache_key)
+from repro.serve.coalesce import compat_key, plan_segments, \
+    prepare_request
+
+REL = 1e-6
+
+BASE = {"variant": ["2d_in", "3d_in"],
+        "cis_node": [130.0, 65.0],
+        "frame_rate": [15.0, 30.0, 60.0],
+        "vdd_scale": [0.9, 1.0]}
+
+
+def _space(i=0):
+    """Distinct-but-shape-compatible spaces: same axes and lengths,
+    different vdd values -> different signatures, same executable."""
+    g = dict(BASE, vdd_scale=[0.80 + 0.01 * i, 1.0])
+    return DesignSpace("edgaze", g)
+
+
+def _assert_parity(a, b, rtol=REL):
+    assert a.n_points == b.n_points
+    assert a.n_feasible == b.n_feasible
+    assert len(a.topk) == len(b.topk)
+    for ra, rb in zip(a.topk, b.topk):
+        assert ra.keys() == rb.keys()
+        for key in ra:
+            if isinstance(ra[key], float):
+                np.testing.assert_allclose(ra[key], rb[key], rtol=rtol)
+            else:
+                assert ra[key] == rb[key]
+
+
+@pytest.fixture
+def svc():
+    service = ExploreService(coalesce_window_s=0.2)
+    yield service
+    service.close()
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: coalesced one-executable serving
+# ---------------------------------------------------------------------------
+
+def test_eight_clients_one_executable_parity_and_cache(svc):
+    """The acceptance gauntlet: 8 concurrent distinct clients -> one
+    coalesce group, ONE step executable, rel-1e-6 parity vs solo, and a
+    repeat wave served entirely from the result cache."""
+    stream_cache_clear()
+    results = {}
+
+    def client(i):
+        results[i] = explore(_space(i), k=5, engine="fused",
+                             chunk_size=8, superchunk=2, service=svc)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert stream_cache_info()["step_compiles"] == 1
+    assert len(results) == 8
+    for i, res in results.items():
+        assert res.serve["coalesce_group"] == 8
+        assert not res.serve["cache_hit"] and not res.serve["deduped"]
+        assert res.serve["dispatches"] >= 1
+        assert res.serve["dispatch_share"] == pytest.approx(1 / 8)
+
+    # solo reruns: SAME executable (no new compiles), rel-1e-6 parity
+    for i, res in results.items():
+        _assert_parity(res, explore(_space(i), k=5, engine="fused",
+                                    chunk_size=8, superchunk=2))
+    assert stream_cache_info()["step_compiles"] == 1
+
+    # repeat wave: every request replays from the result cache with
+    # ZERO new dispatches
+    before = svc.metrics()["dispatches"]
+    wave2 = {}
+
+    def replay(i):
+        wave2[i] = svc.explore(_space(i), k=5, engine="fused",
+                               chunk_size=8, superchunk=2)
+
+    threads = [threading.Thread(target=replay, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert svc.metrics()["dispatches"] == before
+    for i, res in wave2.items():
+        assert res.serve["cache_hit"]
+        assert res.serve["dispatches"] == 0
+        _assert_parity(res, results[i])
+
+    m = svc.metrics()
+    assert m["coalesced_groups"] >= 1 and m["max_group"] == 8
+    assert m["completed"] == 16 and m["failed"] == 0
+
+
+def test_identical_inflight_requests_dedupe(svc):
+    """N identical concurrent requests dispatch ONCE; the twins ride the
+    leader's fresh result."""
+    results = {}
+
+    def client(i):
+        results[i] = svc.explore(_space(0), k=4, engine="fused",
+                                 chunk_size=8)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    deduped = [r for r in results.values() if r.serve["deduped"]]
+    leaders = [r for r in results.values() if not r.serve["deduped"]
+               and not r.serve["cache_hit"]]
+    # all in one batch -> 1 leader + 3 twins; a straggler batch can only
+    # shrink the twin count via cache hits, never add dispatches
+    assert len(leaders) >= 1
+    assert all(r.serve["dispatches"] == 0 for r in deduped)
+    for r in results.values():
+        _assert_parity(r, results[0])
+
+
+def test_incompatible_requests_fall_back_to_solo(svc):
+    """Different k -> different compat keys -> separate (solo) runs in
+    the same batch; both still correct."""
+    out = {}
+
+    def client(i, k):
+        out[i] = svc.explore(_space(i), k=k, engine="fused",
+                             chunk_size=8)
+
+    threads = [threading.Thread(target=client, args=(0, 3)),
+               threading.Thread(target=client, args=(1, 7))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert out[0].k == 3 and out[1].k == 7
+    for i, k in ((0, 3), (1, 7)):
+        assert out[i].serve["coalesce_group"] == 1
+        _assert_parity(out[i], explore(_space(i), k=k, engine="fused",
+                                       chunk_size=8))
+
+
+def test_explore_service_kwarg_routes_and_rejects_conflicts(svc):
+    res = explore(_space(0), k=3, service=svc)
+    assert res.serve is not None and res.k == 3
+    with pytest.raises(ValueError, match="incompatible with service="):
+        explore(_space(0), k=3, service=svc, checkpoint_dir="/tmp/x")
+    with pytest.raises(ValueError, match="incompatible with service="):
+        explore(_space(0), k=3, service=svc, index_range=(0, 4))
+
+
+# ---------------------------------------------------------------------------
+# coalesce geometry
+# ---------------------------------------------------------------------------
+
+def test_compat_key_groups_shapes_not_values(svc):
+    mesh = svc._mesh
+    pr0 = prepare_request(_space(0), k=5, metric="total_j",
+                          backend="xla", chunk_size=8, block_points=4096,
+                          superchunk=2, mesh=mesh)
+    pr1 = prepare_request(_space(7), k=5, metric="total_j",
+                          backend="xla", chunk_size=8, block_points=4096,
+                          superchunk=2, mesh=mesh)
+    assert compat_key(pr0, mesh) == compat_key(pr1, mesh)
+    for kw in (dict(k=6), dict(metric="on_sensor_j"),
+               dict(chunk_size=4), dict(superchunk=1)):
+        base = dict(k=5, metric="total_j", backend="xla", chunk_size=8,
+                    block_points=4096, superchunk=2)
+        base.update(kw)
+        pr2 = prepare_request(_space(0), mesh=mesh, **base)
+        assert compat_key(pr2, mesh) != compat_key(pr0, mesh), kw
+
+
+def test_plan_segments_tile_the_flat_space(svc):
+    pr = prepare_request(_space(0), k=5, metric="total_j",
+                         backend="xla", chunk_size=8, block_points=4096,
+                         superchunk=2, mesh=svc._mesh)
+    segs = plan_segments(pr)
+    assert segs[0][0] == 0 and segs[-1][1] == pr.total
+    for (_, hi), (lo, _) in zip(segs, segs[1:]):
+        assert hi == lo  # contiguous, disjoint
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+def test_result_cache_key_identity():
+    k_a = result_cache_key(_space(0), k=5, metric="total_j",
+                           backend="xla")
+    assert k_a == result_cache_key(_space(0), k=5, metric="total_j",
+                                   backend="xla")
+    assert k_a != result_cache_key(_space(1), k=5, metric="total_j",
+                                   backend="xla")
+    assert k_a != result_cache_key(_space(0), k=6, metric="total_j",
+                                   backend="xla")
+    assert k_a != result_cache_key(_space(0), k=5,
+                                   metric="on_sensor_j", backend="xla")
+    assert k_a != result_cache_key(_space(0), k=5, metric="total_j",
+                                   backend="pallas")
+
+
+def test_result_cache_lru_ttl_and_counters():
+    now = [0.0]
+    cache = ResultCache(capacity=2, ttl_s=10.0, clock=lambda: now[0])
+    cache.put(("a",), "ra")
+    cache.put(("b",), "rb")
+    assert cache.get(("a",)) == "ra"          # refreshes LRU rank
+    cache.put(("c",), "rc")                   # evicts the stalest: b
+    assert cache.get(("b",)) is None
+    assert cache.get(("c",)) == "rc"
+    now[0] = 11.0                              # a + c age out
+    assert cache.get(("a",)) is None
+    s = cache.stats()
+    assert (s["hits"], s["misses"]) == (2, 2)
+    assert s["evictions"] == 1 and s["expirations"] == 1
+    assert s["inserts"] == 3 and s["size"] == 1
+    cache.clear()
+    assert len(cache) == 0 and cache.stats()["hits"] == 0
+
+
+def test_result_cache_rejects_bad_bounds():
+    with pytest.raises(ValueError, match="capacity"):
+        ResultCache(capacity=0)
+    with pytest.raises(ValueError, match="ttl_s"):
+        ResultCache(ttl_s=0.0)
+
+
+def test_cache_ignores_execution_geometry(svc):
+    """Same question, different batching -> one cached answer."""
+    first = svc.explore(_space(0), k=4, chunk_size=8, superchunk=2)
+    again = svc.explore(_space(0), k=4, chunk_size=4, superchunk=1)
+    assert not first.serve["cache_hit"] and again.serve["cache_hit"]
+    _assert_parity(first, again)
+
+
+def test_service_cache_ttl_expiry():
+    with ExploreService(coalesce_window_s=0.0,
+                        cache_ttl_s=0.05) as svc:
+        first = svc.explore(_space(0), k=4, chunk_size=8)
+        time.sleep(0.1)
+        again = svc.explore(_space(0), k=4, chunk_size=8)
+        assert not first.serve["cache_hit"]
+        assert not again.serve["cache_hit"]   # expired -> re-dispatched
+        _assert_parity(first, again)
+
+
+# ---------------------------------------------------------------------------
+# streaming partials
+# ---------------------------------------------------------------------------
+
+def test_partial_stream_monotone_and_final(svc):
+    h = svc.submit(_space(3), k=4, engine="fused", chunk_size=4,
+                   superchunk=1, stream=True)
+    updates = list(h.partials())
+    assert updates, "stream must carry at least the final update"
+    assert [u.seq for u in updates] == list(range(len(updates)))
+    dones = [u.done for u in updates]
+    assert dones == sorted(dones)
+    assert all(not u.final for u in updates[:-1])
+    final = updates[-1]
+    assert final.final and final.done == final.span
+    res = h.result()
+    assert final.n_feasible == res.n_feasible
+    np.testing.assert_allclose(
+        [r[res.metric] for r in final.topk],
+        [r[res.metric] for r in res.topk], rtol=REL)
+    assert res.serve["partial_updates"] == len(updates)
+
+
+def test_nonstreaming_handle_still_gets_final_update(svc):
+    h = svc.submit(_space(0), k=4, chunk_size=8)
+    updates = list(h.partials())
+    assert len(updates) == 1 and updates[0].final
+    assert h.result().n_points == _space(0).n_points
+
+
+def test_stream_failure_reraises_on_consumer():
+    s = TenantStream()
+    s.push(PartialUpdate(seq=0, done=1, span=2, n_feasible=1, topk=[]))
+    s.fail(RuntimeError("boom"))
+    it = iter(s)
+    assert next(it).seq == 0
+    with pytest.raises(RuntimeError, match="boom"):
+        next(it)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: backpressure, deadlines, shutdown
+# ---------------------------------------------------------------------------
+
+def test_queue_full_backpressure(monkeypatch):
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = ExploreService._process_batch
+
+    def gated(self, batch):
+        entered.set()
+        gate.wait(timeout=30.0)
+        orig(self, batch)
+
+    monkeypatch.setattr(ExploreService, "_process_batch", gated)
+    svc = ExploreService(max_queue=1, coalesce_window_s=0.0,
+                         max_batch=1)
+    try:
+        svc.submit(_space(0), k=3, chunk_size=8)   # worker takes this
+        assert entered.wait(timeout=10.0)          # ... and is gated
+        svc.submit(_space(1), k=3, chunk_size=8)   # fills the queue
+        with pytest.raises(QueueFull, match="capacity"):
+            svc.submit(_space(2), k=3, chunk_size=8)
+        assert svc.metrics()["rejected"] == 1
+    finally:
+        gate.set()
+        svc.close()
+
+
+def test_deadline_expires_in_queue():
+    svc = ExploreService(coalesce_window_s=0.3)
+    try:
+        h = svc.submit(_space(0), k=3, chunk_size=8, timeout_s=0.01)
+        time.sleep(0.05)
+        with pytest.raises(RequestTimeout, match="deadline expired"):
+            h.result(timeout=10.0)
+        assert svc.metrics()["expired"] == 1
+    finally:
+        svc.close()
+
+
+def test_result_wait_timeout(svc):
+    h = svc.submit(_space(0), k=3, chunk_size=8)
+    with pytest.raises(RequestTimeout, match="not complete"):
+        h.result(timeout=1e-4)
+    h.result(timeout=60.0)  # and it still completes normally
+
+
+def test_closed_service_rejects_submits():
+    svc = ExploreService()
+    svc.close()
+    with pytest.raises(ServiceClosed, match="closed"):
+        svc.submit(_space(0), k=3)
+    svc.close()  # idempotent
+
+
+def test_close_drains_backlog():
+    svc = ExploreService(coalesce_window_s=0.0)
+    handles = [svc.submit(_space(i), k=3, chunk_size=8)
+               for i in range(3)]
+    svc.close(drain=True)
+    for i, h in enumerate(handles):
+        _assert_parity(h.result(timeout=1.0),
+                       explore(_space(i), k=3, engine="fused",
+                               chunk_size=8))
+
+
+def test_close_without_drain_fails_backlog():
+    svc = ExploreService(coalesce_window_s=5.0, max_queue=8)
+    svc.submit(_space(0), k=3, chunk_size=8)     # occupies the window
+    backlog = [svc.submit(_space(i), k=3, chunk_size=8)
+               for i in range(1, 4)]
+    svc.close(drain=False)
+    failed = 0
+    for h in backlog:
+        try:
+            h.result(timeout=5.0)
+        except ServiceClosed:
+            failed += 1
+    assert failed == len(backlog)
+
+
+def test_submit_validation(svc):
+    with pytest.raises(ValueError, match="k must be"):
+        svc.submit(_space(0), k=0)
+    with pytest.raises(ValueError, match="chunk_size must be"):
+        svc.submit(_space(0), chunk_size=0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        svc.submit(_space(0), engine="warp")
+    with pytest.raises(TypeError, match="DesignSpace"):
+        svc.submit({"variant": ["2d_in"]})
+    with pytest.raises(ValueError, match="timeout_s"):
+        svc.submit(_space(0), timeout_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# asyncio front end
+# ---------------------------------------------------------------------------
+
+def test_async_front_end(svc):
+    import asyncio
+
+    async def main():
+        r1, r2 = await asyncio.gather(
+            svc.aexplore(_space(0), k=4, chunk_size=8),
+            svc.aexplore(_space(1), k=4, chunk_size=8))
+        h = await svc.asubmit(_space(2), k=4, chunk_size=8,
+                              stream=True)
+        updates = [u async for u in svc.apartials(h)]
+        r3 = await svc.aresult(h)
+        return r1, r2, updates, r3
+
+    r1, r2, updates, r3 = asyncio.run(main())
+    assert r1.serve is not None and r2.serve is not None
+    assert updates and updates[-1].final
+    _assert_parity(r3, explore(_space(2), k=4, engine="fused",
+                               chunk_size=8))
